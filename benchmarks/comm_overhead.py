@@ -1,0 +1,30 @@
+"""Paper §3 overhead analysis: FedKT total communication n*M*(s+1) vs
+FedAvg 2*n*M*r — evaluated with REAL serialized model sizes from the
+framework's checkpointing, across the assigned architectures."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import Model
+from benchmarks.common import Emitter
+
+
+def _param_bytes(cfg) -> int:
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
+
+
+def run(em: Emitter, quick=True):
+    n, s = 10, 2
+    archs = ARCH_IDS if not quick else ARCH_IDS[:4]
+    for arch in archs:
+        M = _param_bytes(get_config(arch))
+        fedkt = n * M * (s + 1)
+        em.emit("overhead", arch, "model_bytes", M)
+        em.emit("overhead", arch, "fedkt_total_bytes", fedkt)
+        for r in (2, 10, 50):
+            em.emit("overhead", arch, f"fedavg_{r}r_bytes", 2 * n * M * r)
+        # break-even rounds (paper: r > (s+1)/2)
+        em.emit("overhead", arch, "breakeven_rounds", (s + 1) / 2)

@@ -1,0 +1,86 @@
+"""Shared benchmark fixtures: tasks, learners, result formatting.
+
+Each benchmark module reproduces one paper table/figure on the synthetic
+stand-in tasks (DESIGN.md §2) and emits CSV rows:
+    table,setting,metric,value
+``--full`` uses paper-scale parties/trials; the default quick mode keeps
+``python -m benchmarks.run`` in CI-friendly time on one CPU core.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import FedKTConfig
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
+from repro.data.synthetic import digits, tabular_binary
+from repro.models.smallnets import MLP, PaperCNN
+
+
+@dataclass
+class Task:
+    name: str
+    data: Dict[str, np.ndarray]
+    learner: object
+    num_classes: int
+    num_parties: int
+    net: object = None
+
+
+def make_tasks(quick=True) -> List[Task]:
+    """'adult'-like tabular (RF in the paper -> MLP + RF here) and
+    'mnist'-like digits (CNN)."""
+    n_tab = 6000 if quick else 16000
+    n_img = 4000 if quick else 12000
+    parties_tab = 5 if quick else 20
+    parties_img = 4 if quick else 10
+    steps = 150 if quick else 400
+
+    tab = tabular_binary(n=n_tab, seed=0)
+    img = digits(n=n_img, image_size=16, seed=0)
+    tasks = [
+        Task("tabular", tab,
+             NNLearner(MLP(tab["X_train"].shape[1], 2, hidden=32),
+                       num_classes=2, steps=steps), 2, parties_tab,
+             net=MLP(tab["X_train"].shape[1], 2, hidden=32)),
+        Task("digits", img,
+             NNLearner(PaperCNN(image_size=16, channels=1, num_classes=10),
+                       num_classes=10, steps=steps), 10, parties_img,
+             net=PaperCNN(image_size=16, channels=1, num_classes=10)),
+    ]
+    return tasks
+
+
+def tree_task(quick=True) -> Task:
+    """cod-rna-like binary task with the GBDT learner (model-agnostic
+    demo: FedKT federates a non-differentiable model)."""
+    tab = tabular_binary(n=4000 if quick else 12000, seed=1)
+    return Task("tabular-gbdt", tab,
+                GBDTLearner(num_rounds=10 if quick else 30, depth=4),
+                2, 4 if quick else 10)
+
+
+def fedcfg(task: Task, **kw) -> FedKTConfig:
+    base = dict(num_parties=task.num_parties, num_partitions=2,
+                num_subsets=3, num_classes=task.num_classes, beta=0.5,
+                seed=0)
+    base.update(kw)
+    return FedKTConfig(**base)
+
+
+class Emitter:
+    def __init__(self):
+        self.rows = []
+
+    def emit(self, table, setting, metric, value):
+        self.rows.append((table, setting, metric, value))
+        print(f"{table},{setting},{metric},{value}")
+
+
+def timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, time.time() - t0

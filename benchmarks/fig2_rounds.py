@@ -1,0 +1,44 @@
+"""Paper Figure 2: accuracy vs communication rounds; FedKT-Prox
+initialization (paper §5.2)."""
+from __future__ import annotations
+
+from repro.core.baselines import IterConfig, run_iterative
+from repro.core.fedkt import run_fedkt
+from repro.core.partition import dirichlet_partition
+
+from benchmarks.common import Emitter, fedcfg, make_tasks
+
+
+def run(em: Emitter, quick=True):
+    task = make_tasks(quick)[1]          # digits (the paper plots MNIST)
+    rounds = 10 if quick else 50
+    cfg = fedcfg(task)
+    parts = dirichlet_partition(task.data["y_train"], cfg.num_parties,
+                                cfg.beta, cfg.seed)
+
+    fk = run_fedkt(task.learner, task.data, cfg, party_indices=parts)
+    em.emit("fig2", task.name, "FedKT-1round", round(fk.accuracy, 4))
+
+    for algo in ("fedavg", "fedprox", "scaffold"):
+        lr = 1e-2 if algo == "scaffold" else 1e-3
+        out = run_iterative(task.net, task.data,
+                            IterConfig(algo=algo, rounds=rounds,
+                                       local_steps=60, lr=lr),
+                            party_indices=parts)
+        for r, acc in enumerate(out["acc_per_round"], 1):
+            em.emit("fig2", task.name, f"{algo}-r{r}", round(acc, 4))
+        # rounds needed to beat FedKT
+        beat = next((r + 1 for r, a in enumerate(out["acc_per_round"])
+                     if a > fk.accuracy), None)
+        em.emit("fig2", task.name, f"{algo}-rounds-to-beat-FedKT",
+                beat if beat else f">{rounds}")
+
+    # FedKT-Prox: FedKT as initialization, then FedProx
+    import jax
+    init_params = fk.final_state
+    out = run_iterative(task.net, task.data,
+                        IterConfig(algo="fedprox", rounds=rounds,
+                                   local_steps=60, lr=1e-3),
+                        party_indices=parts, init_params=init_params)
+    for r, acc in enumerate(out["acc_per_round"], 1):
+        em.emit("fig2", task.name, f"FedKT-Prox-r{r}", round(acc, 4))

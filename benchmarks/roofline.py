@@ -1,0 +1,73 @@
+"""Roofline table aggregator: reads the dry-run JSON records and renders
+the §Roofline table (per arch x shape x mesh: three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Emitter
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_records(pattern="dryrun_*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(em: Emitter, quick=True):
+    recs = load_records()
+    ok = [r for r in recs if not r.get("error") and not r.get("skipped")]
+    skipped = [r for r in recs if r.get("skipped")]
+    failed = [r for r in recs if r.get("error")]
+    em.emit("roofline", "summary", "lowered_ok", len(ok))
+    em.emit("roofline", "summary", "skipped", len(skipped))
+    em.emit("roofline", "summary", "failed", len(failed))
+    for r in ok:
+        key = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        em.emit("roofline", key, "t_compute_s",
+                f"{r['t_compute']:.4e}")
+        em.emit("roofline", key, "t_memory_s", f"{r['t_memory']:.4e}")
+        em.emit("roofline", key, "t_collective_s",
+                f"{r['t_collective']:.4e}")
+        em.emit("roofline", key, "dominant", r["dominant"])
+        em.emit("roofline", key, "useful_ratio",
+                f"{r['useful_ratio']:.3f}")
+    for r in failed:
+        em.emit("roofline", f"{r['arch']}/{r['shape']}/{r['mesh']}",
+                "ERROR", r["error"][:80])
+
+
+def markdown_table(mesh="pod1_16x16") -> str:
+    """Renders the EXPERIMENTS.md §Roofline table."""
+    recs = [r for r in load_records() if r.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+        " | dominant | useful FLOP ratio | peak mem/dev (GB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['skipped']} | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — |")
+            continue
+        pm = r.get("peak_memory_bytes")
+        pm = f"{pm/1e9:.2f}" if pm else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | {pm} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

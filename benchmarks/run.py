@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Emits CSV rows ``table,setting,metric,value``.  Default (quick) mode is
+sized for a single CPU core; ``--full`` uses paper-scale settings.
+The roofline section aggregates the dry-run artifacts produced by
+``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Emitter
+
+MODULES = [
+    "table1_accuracy",
+    "fig2_rounds",
+    "table2_privacy",
+    "table5_partitions",
+    "table6_subsets",
+    "table7_imbalance",
+    "table10_voting",
+    "comm_overhead",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+
+    mods = MODULES if not args.only else [
+        m for m in MODULES if m in set(args.only.split(","))]
+    em = Emitter()
+    print("table,setting,metric,value")
+    t00 = time.time()
+    failures = 0
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(em, quick=not args.full)
+            em.emit("_meta", name, "seconds", round(time.time() - t0, 1))
+        except Exception as e:  # keep the harness going
+            failures += 1
+            em.emit("_meta", name, "ERROR", f"{type(e).__name__}: {e}")
+    em.emit("_meta", "total", "seconds", round(time.time() - t00, 1))
+    em.emit("_meta", "total", "failures", failures)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper Table 10: effect of consistent voting (on vs off)."""
+from repro.core.fedkt import run_fedkt
+from benchmarks.common import Emitter, fedcfg, make_tasks
+
+
+def run(em: Emitter, quick=True):
+    for task in make_tasks(quick):
+        for cv in (True, False):
+            cfg = fedcfg(task, consistent_voting=cv)
+            res = run_fedkt(task.learner, task.data, cfg)
+            em.emit("table10", task.name,
+                    "consistent" if cv else "plain",
+                    round(res.accuracy, 4))

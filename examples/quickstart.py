@@ -1,0 +1,35 @@
+"""Quickstart: one-shot federated learning (FedKT) in ~2 minutes on CPU.
+
+Five silos hold heterogeneous shards of a tabular task; one communication
+round later the server has a model close to the centralized upper bound.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.base import FedKTConfig
+from repro.core.fedkt import run_fedkt, run_pate_central, run_solo
+from repro.core.learners import NNLearner
+from repro.data.synthetic import tabular_binary
+from repro.models.smallnets import MLP
+
+data = tabular_binary(n=6000, seed=0)
+learner = NNLearner(MLP(num_features=14, num_classes=2, hidden=32),
+                    num_classes=2, steps=200)
+
+cfg = FedKTConfig(
+    num_parties=5,        # n silos
+    num_partitions=2,     # s student models per silo
+    num_subsets=4,        # t teachers per partition
+    num_classes=2,
+    beta=0.5,             # Dirichlet heterogeneity
+)
+
+print("running FedKT (single communication round)...")
+res = run_fedkt(learner, data, cfg, verbose=True)
+solo = run_solo(learner, data, cfg)
+pate = run_pate_central(learner, data, cfg)
+
+print(f"\nFedKT final-model accuracy : {res.accuracy:.3f}")
+print(f"SOLO (no federation) mean  : {solo:.3f}")
+print(f"centralized PATE (upper bd): {pate:.3f}")
+print(f"\ncommunication: n*M*(s+1) = {cfg.num_parties} models x "
+      f"{cfg.num_partitions + 1} transfers — one round, done.")

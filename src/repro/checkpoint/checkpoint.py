@@ -1,0 +1,64 @@
+"""Checkpointing: pytree <-> .npz with path-keyed arrays + JSON manifest.
+
+Works for params, optimizer state, and FedKT student-model collections.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def f(kp, leaf):
+        keys = []
+        for k in kp:
+            keys.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        flat[_SEP.join(keys)] = np.asarray(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(f, tree)
+    return flat
+
+
+def save(path: str, tree, step: Optional[int] = None,
+         metrics: Optional[Dict[str, Any]] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {"step": step, "metrics": metrics or {},
+                "leaves": sorted(flat)}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like):
+    """Restores into the structure of ``like`` (a pytree template)."""
+    z = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = dict(z)
+
+    idx = {"i": 0}
+    paths = []
+
+    def collect(kp, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        paths.append(_SEP.join(keys))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(collect, like)
+    leaves = [jnp.asarray(flat[p]) for p in paths]
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def manifest(path: str) -> Dict[str, Any]:
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return json.load(f)

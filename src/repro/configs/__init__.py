@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ATTN, ATTN_LOCAL, RGLRU, RWKV,
+    FedKTConfig, InputShape, INPUT_SHAPES, MeshConfig, ModelConfig,
+    MoEConfig, TrainConfig,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS, get_config, get_smoke, long_context_variant,
+)

@@ -1,0 +1,184 @@
+"""Configuration system for the repro framework.
+
+Everything is a frozen dataclass so configs hash, compare, and print cleanly
+and can be used as static arguments to jit.  Architectures register
+themselves in ``repro.configs.registry`` (one module per assigned arch) and
+are selectable via ``--arch <id>`` in every launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Block kinds (per-layer mixer type)
+# ---------------------------------------------------------------------------
+ATTN = "attn"          # softmax attention (GQA; window/softcap via fields)
+ATTN_LOCAL = "attn_local"  # sliding-window attention
+RGLRU = "rglru"        # RG-LRU recurrence (RecurrentGemma / Griffin)
+RWKV = "rwkv"          # RWKV-6 time-mix recurrence
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN settings (GShard-style capacity routing)."""
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared_experts: int = 0      # deepseek-style always-on experts
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01  # load-balance loss weight
+    first_k_dense: int = 0           # leading layers that use a dense FFN
+    dense_ff_mult: int = 1           # d_ff multiplier for those dense layers
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified transformer-family model configuration.
+
+    One engine covers dense / MoE / hybrid-recurrent / attention-free /
+    encoder-decoder architectures through the ``pattern`` field: a tuple of
+    block kinds that is tiled across ``num_layers`` (remainder layers are
+    applied unrolled after the scanned periods).
+    """
+    name: str = "model"
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # layer pattern, tiled over depth.  e.g. gemma2: (ATTN_LOCAL, ATTN);
+    # recurrentgemma: (RGLRU, RGLRU, ATTN_LOCAL); rwkv6: (RWKV,)
+    pattern: Tuple[str, ...] = (ATTN,)
+
+    # attention details
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0            # stablelm uses partial rotary (0.25)
+    window: int = 4096               # sliding window for ATTN_LOCAL blocks
+    attn_softcap: float = 0.0        # gemma2 logit soft-capping (0 = off)
+    final_softcap: float = 0.0       # gemma2 final-logit soft-capping
+    qk_norm: bool = False
+
+    # MLP / MoE
+    mlp: str = "swiglu"              # "swiglu" | "gelu" | "relu2"
+    moe: Optional[MoEConfig] = None
+
+    # norms & residual structure
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    post_norm: bool = False          # gemma2 post-block norms
+    parallel_block: bool = False     # stablelm/gptj style attn+mlp in parallel
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500      # whisper: 30s of audio at 50 Hz
+
+    # modality frontend stub: number of non-text embedding positions that
+    # ``input_specs`` provides pre-computed (VLM patches / audio frames)
+    frontend_embeds: int = 0
+
+    # rwkv dims
+    rwkv_head_dim: int = 64
+
+    # recurrentgemma
+    rglru_conv_width: int = 4
+    rglru_c: float = 8.0             # gate sharpness constant
+
+    # numerics
+    dtype: str = "bfloat16"          # activation dtype
+    param_dtype: str = "float32"
+
+    # ----- derived -----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k in (RGLRU, RWKV) for k in self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if no block attends over unbounded context (long_500k ok)."""
+        return all(k != ATTN for k in self.pattern)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # number of scanned periods and unrolled tail layers
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> Tuple[str, ...]:
+        r = self.num_layers % len(self.pattern)
+        return self.pattern[:r]
+
+
+@dataclass(frozen=True)
+class FedKTConfig:
+    """FedKT algorithm hyper-parameters (paper notation)."""
+    num_parties: int = 10            # n
+    num_partitions: int = 2          # s
+    num_subsets: int = 5             # t
+    num_classes: int = 10            # u
+    consistent_voting: bool = True
+    privacy_level: str = "L0"        # "L0" | "L1" | "L2"
+    gamma: float = 0.0               # Laplace scale is 1/gamma (0 = no noise)
+    query_fraction: float = 1.0      # fraction of D_aux queried (DP budget)
+    beta: float = 0.5                # Dirichlet concentration for partition
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 32
+    seq_len: int = 128
+    learning_rate: float = 1e-3
+    weight_decay: float = 1e-6
+    epochs: int = 10
+    steps: int = 100
+    optimizer: str = "adamw"
+    warmup_steps: int = 10
+    grad_clip: float = 1.0
+    remat: bool = True
+    microbatches: int = 1   # gradient-accumulation splits of the batch
+    pregather: bool = True  # ZeRO-3 bf16 pre-gather (§Perf iter 1/7)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh shape.  (pod, data, model) once multi_pod else
+    (data, model)."""
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+# Input shapes assigned to this paper (see system spec) -----------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}

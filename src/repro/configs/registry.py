@@ -1,0 +1,56 @@
+"""--arch <id> registry for the ten assigned architectures.
+
+Each entry maps the public arch id (dashes, as assigned) to its config
+module.  ``get_config(id)`` returns the full-scale ModelConfig;
+``get_smoke(id)`` returns the reduced same-family variant used by CPU
+smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "phi4-mini-3.8b":        "repro.configs.phi4_mini_3_8b",
+    "mixtral-8x7b":          "repro.configs.mixtral_8x7b",
+    "gemma2-27b":            "repro.configs.gemma2_27b",
+    "recurrentgemma-2b":     "repro.configs.recurrentgemma_2b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "stablelm-3b":           "repro.configs.stablelm_3b",
+    "deepseek-moe-16b":      "repro.configs.deepseek_moe_16b",
+    "whisper-tiny":          "repro.configs.whisper_tiny",
+    "rwkv6-7b":              "repro.configs.rwkv6_7b",
+    "granite-20b":           "repro.configs.granite_20b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).SMOKE
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant used for the long_500k shape.
+
+    Dense full-attention archs get the documented sliding-window variant
+    (window 4096 on every attention block); natively sub-quadratic archs
+    are returned unchanged.  See DESIGN.md §5.
+    """
+    from repro.configs.base import ATTN, ATTN_LOCAL
+    if cfg.subquadratic:
+        return cfg
+    pattern = tuple(ATTN_LOCAL if k == ATTN else k for k in cfg.pattern)
+    win = cfg.window if cfg.window else 4096
+    return cfg.replace(pattern=pattern, window=min(win, 4096),
+                       name=cfg.name + "-swa")

@@ -1,0 +1,140 @@
+"""LM-scale FedKT: the sharded distillation steps (pjit-able pure fns).
+
+Three step kinds, mirroring Algorithm 1 at datacenter scale:
+
+  label_step   — the teacher/student ensemble (params stacked on a
+                 leading "member" axis, sharded across the party mesh
+                 axis) greedily predicts the public batch; the blocked
+                 vote op reduces one-hot votes across members.  Under
+                 pjit the cross-member reduction lowers to ONE
+                 all-reduce: the paper's single communication round.
+  train_step   — student / final model update on voted labels (standard
+                 CE + MoE aux), AdamW, global-norm clip.
+  serve steps  — prefill / decode for the trained final model
+                 (launch/serve.py wires shapes; defined here for reuse).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.voting import token_teacher_vote
+from repro.models import Model
+from repro.optim import clip_by_global_norm, get as get_opt, warmup_cosine
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    opt = get_opt(tcfg.optimizer, weight_decay=tcfg.weight_decay)
+    sched = warmup_cosine(tcfg.learning_rate, tcfg.warmup_steps,
+                          max(tcfg.steps, 1))
+
+    def train_step(params, opt_state, batch):
+        # ZeRO-3 pre-gather: ONE bf16 all-gather per weight per step
+        # (EXPERIMENTS.md §Perf iters 1 & 7).  The gather is hoisted
+        # OUTSIDE the microbatch loop: we differentiate w.r.t. the
+        # gathered bf16 copy and reshard the accumulated gradient back to
+        # the (FSDP) param layout once — the bf16 reduce-scatter ZeRO
+        # prescribes, at 1/m the naive wire cost.
+        from repro.sharding import pregather_params
+        from repro.sharding.specs import (_ACT_MESH, _path_names,
+                                          spec_for_param)
+        from jax.sharding import NamedSharding
+
+        def loss_fn(pcx, mb):
+            return model.loss(pcx, mb, remat=tcfg.remat)
+
+        if not tcfg.pregather:
+            def pregather_params(p, dtype):  # noqa: F811 — policy opt-out
+                return p
+
+        m = tcfg.microbatches
+        if m <= 1:
+            # single microbatch: pre-gather INSIDE the grad so expert/
+            # weight gradients reduce-scatter in the FSDP layout directly
+            # (hoisting here forces full-size gathered-layout grad
+            # all-reduces — measured 3x wire regression on MoE, §Perf
+            # iter 7b)
+            def loss_inner(p, mb):
+                return loss_fn(
+                    pregather_params(p, jnp.dtype(model.cfg.dtype)), mb)
+
+            loss, grads = jax.value_and_grad(loss_inner)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+            lr = sched(opt_state.step + 1)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                       "lr": lr}
+        pc = pregather_params(params, jnp.dtype(model.cfg.dtype))
+        if True:
+            # gradient accumulation: activations scale 1/m (§Perf iter 5)
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(loss_fn)(pc, mb)
+                return (carry[0] + l / m,
+                        jax.tree.map(lambda a, b: a + b / m, carry[1], g)),\
+                    None
+
+            from repro.kernels import ops as _ops
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros_like(p), pc))
+            (loss, gpc), _ = jax.lax.scan(acc, zero, mbs,
+                                          unroll=_ops.CONFIG["unroll"])
+
+        # reshard grads back to the param (FSDP) layout, then promote f32
+        mesh = _ACT_MESH[0]
+
+        def reshard(kp, g, p):
+            if mesh is not None and jnp.issubdtype(p.dtype, jnp.floating):
+                spec = spec_for_param(_path_names(kp), p.shape, mesh)
+                g = jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, spec))
+            return g.astype(jnp.float32)
+
+        grads = jax.tree_util.tree_map_with_path(reshard, gpc, params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(opt_state.step + 1)   # step counts from 0: avoid lr=0
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr": lr}
+
+    return train_step, opt
+
+
+def make_label_step(model: Model, num_members: int,
+                    gamma: float = 0.0) -> Callable:
+    """FedKT vote step over ``num_members`` stacked parameter sets."""
+
+    def label_step(member_params, batch, key=None):
+        preds = jax.vmap(
+            lambda p: model.predict(p, batch))(member_params)  # (M,B,S)
+        labels, gap = token_teacher_vote(
+            preds, model.cfg.vocab_size, gamma=gamma, key=key)
+        return labels, gap
+
+    return label_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, batch):
+        logits, cache = model.logits(params, batch, mode="prefill")
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode(params, token, cache, pos):
+        logits, cache = model.logits(params, {"tokens": token},
+                                     mode="decode", cache=cache, pos=pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return decode

@@ -1,0 +1,123 @@
+"""Uniform Learner interface: anything with fit/predict can be a FedKT
+teacher, student, or final model — differentiable or not.
+
+NNLearner : jit-compiled Adam training loop over a smallnet (MLP / CNN /
+            VGG).  Data is padded to power-of-two buckets so party/subset
+            size variation doesn't retrigger compilation.
+RFLearner / GBDTLearner : the JAX histogram tree learners (trees.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trees as T
+from repro.optim import adamw
+
+
+def _pad_pow2(X, y, min_size=32):
+    n = len(X)
+    m = max(min_size, 1 << (n - 1).bit_length())
+    mask = np.zeros((m,), np.float32)
+    mask[:n] = 1.0
+    Xp = np.zeros((m,) + X.shape[1:], X.dtype)
+    Xp[:n] = X
+    yp = np.zeros((m,), np.int32)
+    yp[:n] = y
+    return jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mask)
+
+
+@dataclass(frozen=True)
+class NNLearner:
+    net: Any                      # smallnets module object (init/apply)
+    num_classes: int
+    steps: int = 300
+    batch_size: int = 64
+    lr: float = 1e-3
+    l2: float = 1e-6
+    sample_weights: bool = False  # unused hook
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fit(self, key, X, y, mask):
+        opt = adamw(weight_decay=self.l2)
+        params = self.net.init(jax.random.fold_in(key, 1))
+        state = opt.init(params)
+        p_sel = mask / mask.sum()
+
+        def loss_fn(p, xb, yb):
+            logits = self.net.apply(p, xb)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(
+                jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+        def step(carry, k):
+            params, state = carry
+            idx = jax.random.choice(k, X.shape[0], (self.batch_size,),
+                                    p=p_sel)
+            g = jax.grad(loss_fn)(params, X[idx], y[idx])
+            params, state = opt.update(g, state, params, self.lr)
+            return (params, state), None
+
+        keys = jax.random.split(jax.random.fold_in(key, 2), self.steps)
+        (params, _), _ = jax.lax.scan(step, (params, state), keys)
+        return params
+
+    def fit(self, key, X, y):
+        Xp, yp, mask = _pad_pow2(np.asarray(X), np.asarray(y))
+        return self._fit(key, Xp, yp, mask)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _predict(self, state, X):
+        return jnp.argmax(self.net.apply(state, X), -1).astype(jnp.int32)
+
+    def predict(self, state, X):
+        return self._predict(state, jnp.asarray(X))
+
+
+@dataclass(frozen=True)
+class RFLearner:
+    num_classes: int
+    num_trees: int = 20
+    depth: int = 6
+
+    def fit(self, key, X, y):
+        X = np.asarray(X, np.float32)
+        edges = jnp.asarray(T.make_bins(X))
+        rf = T.RandomForest(self.num_trees, self.depth, self.num_classes)
+        forest = rf.fit(key, jnp.asarray(X), jnp.asarray(y, jnp.int32),
+                        edges)
+        return (forest, edges)
+
+    def predict(self, state, X):
+        forest, edges = state
+        rf = T.RandomForest(self.num_trees, self.depth, self.num_classes)
+        return rf.predict(forest, jnp.asarray(X, jnp.float32), edges)
+
+
+@dataclass(frozen=True)
+class GBDTLearner:
+    num_classes: int = 2
+    num_rounds: int = 30
+    depth: int = 6
+
+    def fit(self, key, X, y):
+        X = np.asarray(X, np.float32)
+        edges = jnp.asarray(T.make_bins(X))
+        gb = T.GBDT(self.num_rounds, self.depth)
+        return (gb.fit(key, jnp.asarray(X), jnp.asarray(y, jnp.int32),
+                       edges), edges)
+
+    def predict(self, state, X):
+        trees, edges = state
+        gb = T.GBDT(self.num_rounds, self.depth)
+        return gb.predict(trees, jnp.asarray(X, np.float32), edges)
+
+
+def accuracy(learner, state, X, y) -> float:
+    preds = np.asarray(learner.predict(state, X))
+    return float((preds == np.asarray(y)).mean())

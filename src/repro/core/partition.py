@@ -1,0 +1,56 @@
+"""Data partitioning: the paper's federation structure.
+
+Two levels:
+  1. Dirichlet(beta) heterogeneous split of the global training set into
+     n parties (the paper's protocol, following Yurochkin et al.):
+     for each class k, sample p_k ~ Dir_n(beta) and give party j a
+     p_{k,j} fraction of class-k examples.
+  2. Within a party: s partitions, each covering the whole local dataset,
+     each split into t disjoint equal subsets (Algorithm 1 line 2).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def dirichlet_partition(y: np.ndarray, num_parties: int, beta: float,
+                        seed: int = 0, min_size: int = 2) -> List[np.ndarray]:
+    """Returns per-party index arrays.  Retries until every party has at
+    least ``min_size`` examples (paper's experimental practice)."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(y.max()) + 1
+    for _ in range(100):
+        party_idx = [[] for _ in range(num_parties)]
+        for k in range(n_classes):
+            idx_k = np.where(y == k)[0]
+            rng.shuffle(idx_k)
+            p = rng.dirichlet([beta] * num_parties)
+            cuts = (np.cumsum(p) * len(idx_k)).astype(int)[:-1]
+            for j, part in enumerate(np.split(idx_k, cuts)):
+                party_idx[j].extend(part.tolist())
+        sizes = [len(ix) for ix in party_idx]
+        if min(sizes) >= min_size:
+            return [np.array(sorted(ix)) for ix in party_idx]
+    raise RuntimeError("could not satisfy min_size partition")
+
+
+def homogeneous_partition(n: int, num_parties: int,
+                          seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    return [np.sort(a) for a in np.array_split(idx, num_parties)]
+
+
+def subsets_of_partition(local_idx: np.ndarray, num_partitions: int,
+                         num_subsets: int, seed: int = 0
+                         ) -> List[List[np.ndarray]]:
+    """Algorithm 1 line 2: s independent shuffles of the local data, each
+    cut into t disjoint subsets.  Returns [partition][subset] -> indices."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(num_partitions):
+        perm = rng.permutation(local_idx)
+        out.append([np.sort(a) for a in np.array_split(perm, num_subsets)])
+    return out

@@ -1,0 +1,213 @@
+"""Non-differentiable learners in pure JAX: random forest and GBDT.
+
+FedKT's headline claim is model-agnosticism — it federates models that
+FedAvg cannot (paper Table 1 trains a random forest on Adult and a GBDT
+on cod-rna).  These are histogram-based, fixed-depth, fully-vectorized
+tree learners: every depth level builds (node, feature, bin) histograms
+with one scatter-add over the whole dataset, so tree fitting is a single
+jit-compiled program and forests fit under vmap.
+
+Trees are complete binary trees in heap layout:
+  split_feat/split_bin : (2^depth - 1,)  internal nodes
+  leaf                 : (2^depth, C)    class scores / regression values
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_BINS = 32
+
+
+# ---------------------------------------------------------------------------
+# Binning
+# ---------------------------------------------------------------------------
+def make_bins(X: np.ndarray, num_bins: int = NUM_BINS) -> np.ndarray:
+    """Per-feature quantile bin edges: (F, num_bins - 1)."""
+    qs = np.linspace(0, 100, num_bins + 1)[1:-1]
+    return np.percentile(X, qs, axis=0).T.astype(np.float32)
+
+
+def binize(X, edges) -> jnp.ndarray:
+    """X: (N, F) -> int32 bins (N, F) in [0, num_bins)."""
+    return jnp.sum(X[:, :, None] >= edges[None], axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Classification tree (gini)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("depth", "num_classes",
+                                             "num_bins"))
+def fit_tree_gini(xb, y, w, feat_mask, *, depth, num_classes,
+                  num_bins=NUM_BINS):
+    """xb: (N, F) int32 bins; y: (N,) int32; w: (N,) f32 sample weights
+    (bootstrap); feat_mask: (F,) f32 in {0,1}.  Returns tree arrays."""
+    N, F = xb.shape
+    C = num_classes
+    n_internal = 2 ** depth - 1
+    split_feat = jnp.zeros((n_internal,), jnp.int32)
+    split_bin = jnp.zeros((n_internal,), jnp.int32)
+    node = jnp.zeros((N,), jnp.int32)
+
+    for level in range(depth):
+        n_nodes = 2 ** level
+        base = n_nodes - 1
+        # hist: (node, feature, bin, class) weighted counts
+        flat = ((node[:, None] * F + jnp.arange(F)[None]) * num_bins
+                + xb) * C + y[:, None]
+        hist = jnp.zeros((n_nodes * F * num_bins * C,), jnp.float32)
+        hist = hist.at[flat.reshape(-1)].add(
+            jnp.broadcast_to(w[:, None], (N, F)).reshape(-1))
+        hist = hist.reshape(n_nodes, F, num_bins, C)
+
+        left = jnp.cumsum(hist, axis=2)                   # split at bin<=b
+        total = left[:, :, -1:, :]
+        right = total - left
+        ln = left.sum(-1)                                  # (n,F,B)
+        rn = right.sum(-1)
+        gini_l = ln - (left ** 2).sum(-1) / jnp.maximum(ln, 1e-9)
+        gini_r = rn - (right ** 2).sum(-1) / jnp.maximum(rn, 1e-9)
+        score = -(gini_l + gini_r)                         # maximize
+        # last bin => empty right split; mask it and masked features
+        score = score.at[:, :, -1].set(-jnp.inf)
+        score = jnp.where(feat_mask[None, :, None] > 0, score, -jnp.inf)
+
+        flat_best = jnp.argmax(score.reshape(n_nodes, -1), axis=1)
+        bf = (flat_best // num_bins).astype(jnp.int32)     # (n_nodes,)
+        bb = (flat_best % num_bins).astype(jnp.int32)
+        split_feat = jax.lax.dynamic_update_slice(split_feat, bf, (base,))
+        split_bin = jax.lax.dynamic_update_slice(split_bin, bb, (base,))
+
+        f_n = bf[node]                                     # (N,)
+        b_n = bb[node]
+        go_right = xb[jnp.arange(N), f_n] > b_n
+        node = 2 * node + go_right.astype(jnp.int32)
+
+    # leaves: class histograms
+    flat = node * C + y
+    leaf = jnp.zeros((2 ** depth * C,), jnp.float32).at[flat].add(w)
+    leaf = leaf.reshape(2 ** depth, C)
+    leaf = leaf / jnp.maximum(leaf.sum(-1, keepdims=True), 1e-9)
+    return split_feat, split_bin, leaf
+
+
+def tree_apply(tree, xb):
+    """Returns per-sample leaf rows (N, C)."""
+    split_feat, split_bin, leaf = tree
+    N = xb.shape[0]
+    depth = int(np.log2(leaf.shape[0]))
+    node = jnp.zeros((N,), jnp.int32)
+    for level in range(depth):
+        base = 2 ** level - 1
+        f = split_feat[base + node]
+        b = split_bin[base + node]
+        node = 2 * node + (xb[jnp.arange(N), f] > b).astype(jnp.int32)
+    return leaf[node]
+
+
+# ---------------------------------------------------------------------------
+# Random forest
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RandomForest:
+    num_trees: int = 20
+    depth: int = 6
+    num_classes: int = 2
+    feature_frac: float = 0.7
+
+    def fit(self, key, X, y, edges):
+        xb = binize(X, edges)
+        N, F = xb.shape
+        kb, kf = jax.random.split(key)
+        # bootstrap via multinomial counts as sample weights
+        w = jax.random.multinomial(
+            kb, N, jnp.full((self.num_trees, N), 1.0 / N)).astype(jnp.float32)
+        fm = (jax.random.uniform(kf, (self.num_trees, F))
+              < self.feature_frac).astype(jnp.float32)
+        fm = jnp.maximum(fm, jnp.zeros_like(fm).at[:, 0].set(1.0))
+
+        fit_one = functools.partial(fit_tree_gini, depth=self.depth,
+                                    num_classes=self.num_classes)
+        return jax.vmap(lambda wi, fi: fit_one(xb, y, wi, fi))(w, fm)
+
+    def predict(self, forest, X, edges):
+        xb = binize(X, edges)
+        probs = jax.vmap(lambda t: tree_apply(t, xb))(forest)  # (T,N,C)
+        return jnp.argmax(probs.mean(0), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# GBDT (binary, logistic loss, XGBoost-style gains)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("depth", "num_bins"))
+def fit_tree_gh(xb, g, h, *, depth, num_bins=NUM_BINS, lam=1.0):
+    """Regression tree on gradients/hessians.  Returns tree arrays with
+    scalar leaves (2^depth, 1)."""
+    N, F = xb.shape
+    n_internal = 2 ** depth - 1
+    split_feat = jnp.zeros((n_internal,), jnp.int32)
+    split_bin = jnp.zeros((n_internal,), jnp.int32)
+    node = jnp.zeros((N,), jnp.int32)
+
+    for level in range(depth):
+        n_nodes = 2 ** level
+        base = n_nodes - 1
+        flat = (node[:, None] * F + jnp.arange(F)[None]) * num_bins + xb
+        gh = jnp.zeros((2, n_nodes * F * num_bins), jnp.float32)
+        gh = gh.at[0, flat.reshape(-1)].add(
+            jnp.broadcast_to(g[:, None], (N, F)).reshape(-1))
+        gh = gh.at[1, flat.reshape(-1)].add(
+            jnp.broadcast_to(h[:, None], (N, F)).reshape(-1))
+        G = gh[0].reshape(n_nodes, F, num_bins)
+        H = gh[1].reshape(n_nodes, F, num_bins)
+        GL, HL = jnp.cumsum(G, 2), jnp.cumsum(H, 2)
+        GT, HT = GL[:, :, -1:], HL[:, :, -1:]
+        GR, HR = GT - GL, HT - HL
+        gain = GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam) \
+            - GT ** 2 / (HT + lam)
+        gain = gain.at[:, :, -1].set(-jnp.inf)
+
+        flat_best = jnp.argmax(gain.reshape(n_nodes, -1), axis=1)
+        bf = (flat_best // num_bins).astype(jnp.int32)
+        bb = (flat_best % num_bins).astype(jnp.int32)
+        split_feat = jax.lax.dynamic_update_slice(split_feat, bf, (base,))
+        split_bin = jax.lax.dynamic_update_slice(split_bin, bb, (base,))
+        f_n, b_n = bf[node], bb[node]
+        node = 2 * node + (xb[jnp.arange(N), f_n] > b_n).astype(jnp.int32)
+
+    n_leaves = 2 ** depth
+    Gs = jnp.zeros((n_leaves,), jnp.float32).at[node].add(g)
+    Hs = jnp.zeros((n_leaves,), jnp.float32).at[node].add(h)
+    leaf = (-Gs / (Hs + lam))[:, None]
+    return split_feat, split_bin, leaf
+
+
+@dataclass(frozen=True)
+class GBDT:
+    num_rounds: int = 30
+    depth: int = 6
+    learning_rate: float = 0.3
+    num_classes: int = 2  # binary only
+
+    def fit(self, key, X, y, edges):
+        xb = binize(X, edges)
+        yf = y.astype(jnp.float32)
+        logits = jnp.zeros((X.shape[0],), jnp.float32)
+        trees = []
+        for _ in range(self.num_rounds):
+            p = jax.nn.sigmoid(logits)
+            tree = fit_tree_gh(xb, p - yf, p * (1 - p), depth=self.depth)
+            logits = logits + self.learning_rate * tree_apply(tree, xb)[:, 0]
+            trees.append(tree)
+        return jax.tree.map(lambda *t: jnp.stack(t), *trees)
+
+    def predict(self, trees, X, edges):
+        xb = binize(X, edges)
+        vals = jax.vmap(lambda t: tree_apply(t, xb)[:, 0])(trees)
+        logits = self.learning_rate * vals.sum(0)
+        return (logits > 0).astype(jnp.int32)

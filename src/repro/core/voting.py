@@ -1,0 +1,89 @@
+"""Vote aggregation: the paper's Algorithm 1 math.
+
+Party side  (lines 6-11): per-partition teacher ensemble max-vote, with
+optional L2 Laplace noise on the histogram.
+Server side (lines 14-22): consistent voting over the n*s student models
+(v_m(x) = s * |{i : v^i_m(x) = s}|), with optional L1 Laplace noise.
+
+Vote counting runs through kernels/ops.votes (Pallas on TPU); this module
+adds the federation semantics, the on-device Laplace mechanism, and the
+vote-gap bookkeeping the privacy accountant needs (Lemma 7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+class VoteResult(NamedTuple):
+    labels: jnp.ndarray       # (T,) int32
+    counts: jnp.ndarray       # (T, U) int32 — CLEAN counts (for privacy)
+    top_gap: jnp.ndarray      # (T,) f32 — clean top1 - top2 (Lemma 7)
+
+
+def laplace(key, shape, scale):
+    """Laplace(0, scale) via inverse CDF of uniform (on-device, counter-
+    based PRNG — DESIGN.md §3)."""
+    u = jax.random.uniform(key, shape, minval=-0.5 + 1e-7, maxval=0.5)
+    return -scale * jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
+
+
+def teacher_vote(preds, num_classes, *, gamma=0.0, key=None,
+                 impl="auto") -> VoteResult:
+    """Party-side ensemble vote.  preds: (t, T) int32 teacher predictions.
+
+    gamma > 0 adds Lap(1/gamma) to the histogram (FedKT-L2, lines 9-10).
+    """
+    t, T = preds.shape
+    noise = None
+    if gamma > 0.0:
+        assert key is not None
+        noise = laplace(key, (T, num_classes), 1.0 / gamma)
+    labels, _, _ = ops.votes(preds, num_classes, noise, impl=impl)
+    _, counts = ref.vote_aggregate_ref(preds, num_classes)
+    top2 = jax.lax.top_k(counts.astype(jnp.float32), 2)[0]
+    return VoteResult(labels, counts, top2[:, 0] - top2[:, 1])
+
+
+def consistent_vote(student_preds, num_classes, *, consistent=True,
+                    gamma=0.0, key=None, impl="auto") -> VoteResult:
+    """Server-side vote.  student_preds: (n, s, T) int32.
+
+    consistent=True implements the paper's consistent voting: a party
+    contributes s votes for class m iff all its s students predict m.
+    gamma > 0 adds Lap(1/gamma) (FedKT-L1, lines 20-21).
+    """
+    n, s, T = student_preds.shape
+    if consistent:
+        first = student_preds[:, 0]                       # (n, T)
+        agree = jnp.all(student_preds == first[:, None], axis=1)  # (n, T)
+        onehot = jax.nn.one_hot(first, num_classes, dtype=jnp.int32)
+        counts = s * jnp.sum(onehot * agree[..., None], axis=0)   # (T, U)
+    else:
+        flat = student_preds.reshape(n * s, T)
+        _, counts = ref.vote_aggregate_ref(flat, num_classes)
+
+    scores = counts.astype(jnp.float32)
+    if gamma > 0.0:
+        assert key is not None
+        scores = scores + laplace(key, (T, num_classes), 1.0 / gamma)
+    labels = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    top2 = jax.lax.top_k(counts.astype(jnp.float32), 2)[0]
+    return VoteResult(labels, counts, top2[:, 0] - top2[:, 1])
+
+
+def token_teacher_vote(preds_bts, vocab_size, *, gamma=0.0, key=None,
+                       impl="auto"):
+    """LM-scale party-side vote: preds (M, B, S) over a vocab-sized class
+    space.  Uses the blocked kernel path; returns (labels (B,S), gap)."""
+    M, B, S = preds_bts.shape
+    noise = None
+    if gamma > 0.0:
+        assert key is not None
+        noise = laplace(key, (B * S, vocab_size), 1.0 / gamma)
+    labels, t1, t2 = ops.token_votes(preds_bts, vocab_size, noise, impl=impl)
+    return labels, (t1 - t2)

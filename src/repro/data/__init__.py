@@ -1,0 +1,2 @@
+from repro.data.pipeline import TokenDataset, party_token_datasets  # noqa: F401
+from repro.data import synthetic  # noqa: F401

@@ -1,0 +1,53 @@
+"""Data pipeline: batching, shuffling, party splits for the LM path.
+
+Host-side (numpy) pipeline feeding device batches — deterministic,
+seeded, with Dirichlet party partitioning reused from core/partition.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.partition import dirichlet_partition
+
+
+class TokenDataset:
+    """(N, S+1) token matrix -> batches of {tokens, labels} (next-token)."""
+
+    def __init__(self, seqs: np.ndarray, seed: int = 0):
+        assert seqs.ndim == 2
+        self.seqs = seqs.astype(np.int32)
+        self.rng = np.random.default_rng(seed)
+
+    def __len__(self):
+        return len(self.seqs)
+
+    def batches(self, batch_size: int, steps: Optional[int] = None,
+                labels: Optional[np.ndarray] = None
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        """Infinite (or ``steps``-bounded) shuffled batch stream.  If
+        ``labels`` is given (distillation), they replace the shifted
+        next-token labels."""
+        n, produced = len(self.seqs), 0
+        while steps is None or produced < steps:
+            order = self.rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i:i + batch_size]
+                seq = self.seqs[idx]
+                if labels is not None:
+                    yield {"tokens": seq[:, :-1], "labels": labels[idx]}
+                else:
+                    yield {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+                produced += 1
+                if steps is not None and produced >= steps:
+                    return
+
+
+def party_token_datasets(seqs: np.ndarray, num_parties: int, beta: float,
+                         seed: int = 0) -> List[TokenDataset]:
+    """Dirichlet-heterogeneous split of sequences by their dominant token
+    class (a proxy label so 'label skew' is meaningful for LM data)."""
+    proxy = (seqs[:, 0] % 10).astype(np.int32)
+    parts = dirichlet_partition(proxy, num_parties, beta, seed)
+    return [TokenDataset(seqs[ix], seed + i) for i, ix in enumerate(parts)]

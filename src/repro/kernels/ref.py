@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: small, obviously-correct, memory-naive
+implementations.  Kernel tests sweep shapes/dtypes and assert_allclose
+against these; ``ops.py`` also dispatches to (chunked variants of) these on
+non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                  q_offset=0):
+    """Naive softmax attention oracle.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) with H % KV == 0.
+    ``q_offset`` is the absolute position of q[0] (for decode, Skv-1).
+    ``window``: sliding window size (0 = unbounded).
+    Returns (B, Sq, H, dh) in q.dtype.
+    """
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to H
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+def rglru_scan_ref(x, log_a, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + x_t, scanned over axis 1.
+
+    x, log_a: (B, S, D) (x already carries the sqrt(1-a^2)*gated-input
+    factor; the block computes that).  Returns (h, h_last) where h is
+    (B, S, D) and h_last is (B, D).
+    """
+    xf = x.astype(jnp.float32)
+    af = log_a.astype(jnp.float32)
+    B, S, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(h, t):
+        xt, at = t
+        h = jnp.exp(at) * h + xt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (xf.swapaxes(0, 1), af.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 WKV recurrence
+# ---------------------------------------------------------------------------
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """RWKV-6 token-mixing recurrence oracle.
+
+    r, k, v, w: (B, S, H, dh); u: (H, dh).  w is the per-step decay in
+    (0, 1) (already exp(-exp(...))-transformed by the block).
+    state s: (B, H, dh_k, dh_v).
+      o_t = r_t . (s + (u*k_t) v_t^T);  s <- w_t[:,None] * s + k_t v_t^T
+    Returns (o, s_last): o (B, S, H, dh), s_last (B, H, dh, dh).
+    """
+    B, S, H, dh = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(s, t):
+        rt, kt, vt, wt = t  # (B, H, dh)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,dhk,dhv)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, o
+
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+    s_last, os_ = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return os_.swapaxes(0, 1).astype(r.dtype), s_last
+
+
+# ---------------------------------------------------------------------------
+# PATE vote aggregation (the paper's core op)
+# ---------------------------------------------------------------------------
+def vote_aggregate_ref(preds, num_classes, noise=None):
+    """Teacher-ensemble max voting.
+
+    preds: (M, T) int32 — class prediction of each of M teachers for each
+    of T queries.  noise: optional (T, num_classes) float32 Laplace noise
+    added to the vote histogram before the argmax (the paper's
+    gamma-mechanism).  Returns (labels (T,) int32, counts (T, U) int32).
+    """
+    onehot = jax.nn.one_hot(preds, num_classes, dtype=jnp.int32)  # (M,T,U)
+    counts = onehot.sum(0)                                        # (T, U)
+    scores = counts.astype(jnp.float32)
+    if noise is not None:
+        scores = scores + noise.astype(jnp.float32)
+    labels = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    return labels, counts

@@ -1,0 +1,74 @@
+"""RG-LRU linear-recurrence Pallas kernel (RecurrentGemma / Griffin).
+
+Computes h_t = exp(log_a_t) * h_{t-1} + x_t along the sequence axis.
+This is the serial bottleneck of the recurrent blocks; the TPU-native
+formulation chunks time into VMEM-resident blocks: the grid walks
+(batch, d-block, time-block) with the time axis innermost so the hidden
+state carries across grid steps in VMEM scratch — HBM traffic is exactly
+one read of (x, log_a) and one write of h, with no state round-trips.
+
+Channel blocks are 128-lane aligned; the in-chunk recurrence runs on the
+VPU via fori_loop over the (bs) time steps of the chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, h0_ref, h_ref, hlast_ref, carry_ref, *, bs, ns):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)   # (1, bd) -> (bd,)
+
+    x = x_ref[0].astype(jnp.float32)                     # (bs, bd)
+    a = a_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = jnp.exp(a[t]) * h + x[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, carry_ref[...])
+    carry_ref[...] = h
+
+    @pl.when(it == ns - 1)
+    def _final():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "block_d", "interpret"))
+def rglru_scan(x, log_a, h0, *, block_s=256, block_d=256, interpret=False):
+    """x, log_a: (B, S, D); h0: (B, D).  Returns (h (B,S,D), h_last (B,D))."""
+    B, S, D = x.shape
+    bs, bd = min(block_s, S), min(block_d, D)
+    assert S % bs == 0 and D % bd == 0
+    ns, nd = S // bs, D // bd
+
+    kern = functools.partial(_kernel, bs=bs, ns=ns)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, id_, it: (b, it, id_)),
+            pl.BlockSpec((1, bs, bd), lambda b, id_, it: (b, it, id_)),
+            pl.BlockSpec((1, bd), lambda b, id_, it: (b, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, id_, it: (b, it, id_)),
+            pl.BlockSpec((1, bd), lambda b, id_, it: (b, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(x, log_a, h0)

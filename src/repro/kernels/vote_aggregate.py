@@ -1,0 +1,111 @@
+"""PATE vote-aggregation Pallas kernel — the paper's core operation.
+
+Given M teacher predictions for T queries, computes per query the (noisy)
+max-vote label plus the top-2 vote scores (needed by consistent voting and
+by the Lemma-7 privacy bound q = Pr[M(d) != o*]).
+
+The paper's setting has u <= 10 classes; scaled to per-token LM voting the
+class axis is the vocabulary (32k-256k), so a dense (T, U) histogram never
+fits on chip.  TPU-native reformulation: the grid walks (query-block,
+class-block) with the class axis innermost; each step histogram-counts the
+M teacher votes that fall inside the current class block (rank-1 compares
+on the VPU, no HBM histogram), adds the Laplace noise block, and folds the
+block's top-2 into running (best, second, argbest) VMEM accumulators.
+Output is O(T), not O(T*U).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(preds_ref, noise_ref, label_ref, top1_ref, top2_ref,
+            best_ref, second_ref, argbest_ref, *, M, bt, bu, nu):
+    iu = pl.program_id(1)
+
+    @pl.when(iu == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        second_ref[...] = jnp.full_like(second_ref, NEG_INF)
+        argbest_ref[...] = jnp.zeros_like(argbest_ref)
+
+    class_base = iu * bu
+    ids = class_base + jax.lax.broadcasted_iota(jnp.int32, (bt, bu), 1)
+
+    def count_one(m, counts):
+        p = preds_ref[m, :]                       # (bt,)
+        return counts + (p[:, None] == ids).astype(jnp.float32)
+
+    counts = jax.lax.fori_loop(
+        0, M, count_one, jnp.zeros((bt, bu), jnp.float32))
+    scores = counts + noise_ref[...].astype(jnp.float32)
+
+    # top-2 of this class block
+    m1 = jnp.max(scores, axis=1, keepdims=True)                  # (bt,1)
+    i1 = jnp.argmax(scores, axis=1).astype(jnp.int32)            # (bt,)
+    masked = jnp.where(scores == m1, NEG_INF, scores)
+    m2 = jnp.max(masked, axis=1, keepdims=True)
+
+    best, second = best_ref[...], second_ref[...]
+    m1_ = m1
+    take = m1_ > best          # strictly greater: first-occurrence argmax
+    new_best = jnp.where(take, m1_, best)
+    new_second = jnp.maximum(jnp.where(take, best, m1_), second)
+    new_second = jnp.maximum(new_second, jnp.where(take, m2, NEG_INF))
+    argbest_ref[...] = jnp.where(
+        take[:, 0], class_base + i1, argbest_ref[...])
+    best_ref[...] = new_best
+    second_ref[...] = new_second
+
+    @pl.when(iu == nu - 1)
+    def _final():
+        label_ref[...] = argbest_ref[...]
+        top1_ref[...] = best_ref[...][:, 0]
+        top2_ref[...] = second_ref[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_classes", "block_t", "block_u", "interpret"))
+def vote_aggregate(preds, noise, *, num_classes, block_t=128, block_u=512,
+                   interpret=False):
+    """preds: (M, T) int32; noise: (T, U) float32 (zeros for L0).
+
+    Returns (labels (T,) int32, top1 (T,) f32, top2 (T,) f32).
+    """
+    M, T = preds.shape
+    U = num_classes
+    bt, bu = min(block_t, T), min(block_u, U)
+    assert T % bt == 0 and U % bu == 0, (T, U, bt, bu)
+    nt, nu = T // bt, U // bu
+
+    kern = functools.partial(_kernel, M=M, bt=bt, bu=bu, nu=nu)
+    return pl.pallas_call(
+        kern,
+        grid=(nt, nu),
+        in_specs=[
+            pl.BlockSpec((M, bt), lambda it, iu: (0, it)),
+            pl.BlockSpec((bt, bu), lambda it, iu: (it, iu)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda it, iu: (it,)),
+            pl.BlockSpec((bt,), lambda it, iu: (it,)),
+            pl.BlockSpec((bt,), lambda it, iu: (it,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),   # best
+            pltpu.VMEM((bt, 1), jnp.float32),   # second
+            pltpu.VMEM((bt,), jnp.int32),       # argbest
+        ],
+        interpret=interpret,
+    )(preds, noise)

@@ -1,0 +1,85 @@
+"""RWKV-6 (Finch) WKV recurrence Pallas kernel.
+
+Per head, per step:
+    o_t = r_t . (S + (u * k_t) v_t^T)
+    S  <- diag(w_t) S + k_t v_t^T
+with data-dependent decay w_t in (0,1) and a (dh, dh) matrix state S.
+
+TPU formulation: grid (B, H, time-block) with time innermost; the (dh, dh)
+f32 state lives in VMEM scratch and carries across time blocks, so HBM
+traffic is one pass over (r, k, v, w) and one write of o.  dh = 64 means
+the state is a single (64, 64) VREG-friendly tile; the in-chunk loop runs
+rank-1 updates on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, slast_ref,
+            s_ref, *, bs, ns):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (bs, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (dh,)
+
+    def step(t, s):
+        kv = k[t][:, None] * v[t][None, :]       # (dh_k, dh_v)
+        o = jnp.sum(r[t][:, None] * (s + u[:, None] * kv), axis=0)
+        o_ref[0, 0, t, :] = o.astype(o_ref.dtype)
+        return w[t][:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, bs, step, s_ref[...])
+    s_ref[...] = s
+
+    @pl.when(it == ns - 1)
+    def _final():
+        slast_ref[0, 0] = s.astype(slast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def wkv6(r, k, v, w, u, s0, *, block_s=256, interpret=False):
+    """r/k/v/w: (B, H, S, dh); u: (H, dh); s0: (B, H, dh, dh).
+
+    Returns (o (B,H,S,dh), s_last (B,H,dh,dh) float32).
+    """
+    B, H, S, dh = r.shape
+    bs = min(block_s, S)
+    assert S % bs == 0
+    ns = S // bs
+
+    kern = functools.partial(_kernel, bs=bs, ns=ns)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, dh), lambda b, h, it: (h, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bs, dh), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, dh), r.dtype),
+            jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

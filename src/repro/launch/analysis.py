@@ -1,0 +1,212 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+collective term = collective_bytes_per_device / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD
+per-device module).  Collective bytes are parsed from the HLO text:
+for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take the op's *result* bytes, with a 2x factor for
+all-reduce (ring: reduce-scatter + all-gather pass) — a documented
+first-order wire-traffic model.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes in the (per-device) module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition("=")
+        rhs = rhs.strip()
+        kind = next((k for k in _COLLECTIVES
+                     if rhs.startswith(k + "(")
+                     or re.match(rf"\(?[a-z0-9]+\[[0-9,]*\].*\)?\s*{k}\(",
+                                 rhs)), None)
+        if kind is None:
+            # rhs looks like "bf16[2048]{0} all-reduce(...)"
+            m = re.match(r"[^a-z]*(?:\(?)([a-z0-9]+\[[0-9,]*\][^ ]*(?:, "
+                         r"[a-z0-9]+\[[0-9,]*\][^ ]*)*)\)?\s+([a-z-]+)\(",
+                         rhs)
+            if not m or m.group(2) not in _COLLECTIVES:
+                continue
+            kind = m.group(2)
+            shapes = m.group(1)
+        else:
+            shapes = rhs.split(kind + "(")[0]
+        out[kind] += sum(_shape_bytes(m)
+                         for m in _SHAPE_RE.finditer(shapes))
+    return out
+
+
+def wire_bytes(coll: Dict[str, int]) -> int:
+    """First-order per-chip wire traffic."""
+    return (2 * coll["all-reduce"] + coll["all-gather"]
+            + coll["reduce-scatter"] + coll["all-to-all"]
+            + coll["collective-permute"])
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective: Dict[str, int]
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float
+    peak_memory_bytes: Optional[float] = None
+    num_devices: int = 1
+    notes: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(arch, shape, mesh_name, compiled, num_devices,
+            model_flops_total, notes="") -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    wb = wire_bytes(coll)
+
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = wb / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_mem = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+
+    useful = model_flops_total / max(flops * num_devices, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts, collective=coll,
+        wire_bytes_per_device=wb, t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, dominant=dom,
+        model_flops_total=model_flops_total, useful_ratio=useful,
+        peak_memory_bytes=peak_mem, num_devices=num_devices, notes=notes)
+
+
+def extrapolate(full: Roofline, p1: Roofline, p2: Roofline,
+                eff_periods: float) -> Roofline:
+    """Affine depth extrapolation: X_true = X(1) + (P-1) * (X(2) - X(1)).
+
+    The probes compile with every chunk/period scan unrolled, so their
+    cost analysis sees all bodies; the full compile contributes only the
+    memory proof (peak bytes from the production scan program).
+    """
+    def ext(a, b):
+        # costs are monotone in depth; negative deltas are fusion noise
+        # on tiny probes — clamp
+        return a + (eff_periods - 1.0) * max(0.0, b - a)
+
+    flops = ext(p1.flops_per_device, p2.flops_per_device)
+    byts = ext(p1.bytes_per_device, p2.bytes_per_device)
+    coll = {k: int(max(0.0, ext(p1.collective[k], p2.collective[k])))
+            for k in p1.collective}
+    wb = wire_bytes(coll)
+    t_c, t_m, t_x = flops / PEAK_FLOPS, byts / HBM_BW, wb / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    return Roofline(
+        arch=full.arch, shape=full.shape, mesh=full.mesh,
+        flops_per_device=flops, bytes_per_device=byts, collective=coll,
+        wire_bytes_per_device=wb, t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, dominant=dom,
+        model_flops_total=full.model_flops_total,
+        useful_ratio=full.model_flops_total / max(flops * full.num_devices,
+                                                  1.0),
+        peak_memory_bytes=full.peak_memory_bytes,
+        num_devices=full.num_devices,
+        notes=full.notes)
+
+
+def count_params(shape_tree, exclude_embed=True) -> int:
+    import jax
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shape_tree)[0]:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if exclude_embed and "embed" in keys:
+            continue
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def model_flops(cfg, shape_kind: str, num_tokens: int,
+                param_count: int) -> float:
+    """6*N*D for training, 2*N*D for inference forward (per step);
+    N = active params (MoE: top_k/num_experts of expert params +
+    the rest)."""
+    n_active = param_count
+    if cfg.moe is not None:
+        # expert params scale by activation ratio
+        m = cfg.moe
+        frac = (m.top_k + m.num_shared_experts) / (
+            m.num_experts + m.num_shared_experts)
+        # crude split: experts hold most FFN params
+        e_params = (cfg.num_layers * m.num_experts * cfg.d_ff
+                    * cfg.d_model * (3 if cfg.mlp in ("swiglu", "geglu")
+                                     else 2))
+        n_active = param_count - e_params + e_params * frac
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * num_tokens

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+against the production mesh, prove it shards and fits, and extract the
+roofline terms.  (The two lines above MUST precede any jax import: jax
+locks the device count at first init.)
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out benchmarks/results]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, TrainConfig, get_config,
+                           long_context_variant)
+from repro.core.distill import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.launch import analysis
+from repro.launch.inputs import (decode_specs, prefill_batch_specs,
+                                 train_batch_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.sharding import (batch_sharding, cache_sharding,
+                            opt_state_sharding, param_shardings, replicated)
+
+SKIPS = {
+    # whisper decoder max position is 448 in the real model; a 500k
+    # decoder cache is architecturally meaningless (DESIGN.md §5)
+    ("whisper-tiny", "long_500k"): "enc-dec decoder has no 500k context",
+}
+
+# Measured per-arch gradient-accumulation policy (EXPERIMENTS.md §Perf
+# iter 7): microbatching divides activation memory but re-replicates
+# batch-spread attention (phi4: 24 heads force batch-over-all-axes
+# sharding, which needs the full 256 batch) and replays MoE dispatch
+# overheads — so it is enabled only where it fixes an OOM without a
+# FLOPs collapse.
+# deepseek's 64-expert fine-grained dispatch degrades under ANY pregather
+# variant (measured 27x useful-ratio collapse, §Perf iter 7b) — baseline
+# FSDP gathers are restored for it; root-causing the GSPMD propagation
+# failure around the (P,64,D,F) expert stacks is flagged future work.
+PREGATHER_POLICY = {"deepseek-moe-16b": False}
+
+MICROBATCH_POLICY = {
+    "rwkv6-7b": 4,            # 295 GB -> 21 GB/dev
+    "recurrentgemma-2b": 4,   # 165 GB -> 8 GB/dev
+    "gemma2-27b": 4,          # 51 GB -> 22 GB/dev, useful ratio flat
+    "llava-next-mistral-7b": 4,  # 42 -> 20 GB, useful ratio up
+    "granite-20b": 4,         # 65 -> 41 GB (64-head attn shards fine)
+}
+
+
+def probe_cfg(cfg, n_periods: int):
+    """Depth-reduced variant with the same per-period structure:
+    fkd dense layers + n_periods full patterns, no tail.  Costs are
+    affine in depth, so two probes recover exact per-period deltas
+    (XLA's HloCostAnalysis counts a while body once — the probes compile
+    with the period scan UNROLLED via ops.configure(unroll=True))."""
+    fkd = cfg.moe.first_k_dense if cfg.moe else 0
+    kw = {"num_layers": fkd + n_periods * len(cfg.pattern)}
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = n_periods
+    return cfg.replace(**kw)
+
+
+def effective_periods(cfg) -> float:
+    fkd = cfg.moe.first_k_dense if cfg.moe else 0
+    p = len(cfg.pattern)
+    rem = cfg.num_layers - fkd
+    return rem // p + (rem % p) / p
+
+
+def resolve_cfg(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    notes = ""
+    if shape_name == "long_500k":
+        new = long_context_variant(cfg)
+        if new is not cfg:
+            notes = "SWA long-context variant (window 4096)"
+        cfg = new
+    if shape.kind != "train":
+        cfg = cfg.replace(param_dtype="bfloat16")  # serving weights
+    return cfg, shape, notes
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, cfg=None):
+    """Builds, lowers, and compiles one (arch, shape, mesh) combo.
+    Returns (compiled, num_tokens, cfg, param_count, shape, notes)."""
+    if cfg is None:
+        cfg, shape, notes = resolve_cfg(arch, shape_name)
+    else:
+        shape = INPUT_SHAPES[shape_name]
+        notes = ""
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    pshapes = jax.eval_shape(lambda: model.init(key))
+    pshard = param_shardings(pshapes, mesh)
+
+    if shape.kind == "train":
+        mb = int(os.environ.get(
+            "REPRO_MICROBATCHES",
+            str(MICROBATCH_POLICY.get(arch, 1))))
+        tcfg = TrainConfig(batch_size=shape.global_batch,
+                           seq_len=shape.seq_len, steps=1000,
+                           microbatches=mb,
+                           pregather=PREGATHER_POLICY.get(arch, True))
+        step_fn, opt = make_train_step(model, tcfg)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        oshard = opt_state_sharding(oshapes, pshard, mesh)
+        bspecs = train_batch_specs(cfg, shape)
+        bshard = batch_sharding(bspecs, mesh)
+
+        def step(params, opt_state, batch):
+            return step_fn(params, opt_state, batch)
+
+        jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard))
+        lowered = jitted.lower(pshapes, oshapes, bspecs)
+        num_tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model)
+        bspecs = prefill_batch_specs(cfg, shape)
+        bshard = batch_sharding(bspecs, mesh)
+        jitted = jax.jit(lambda p, b: step_fn(p, b),
+                         in_shardings=(pshard, bshard))
+        lowered = jitted.lower(pshapes, bspecs)
+        num_tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        step_fn = make_decode_step(model)
+        token, cache, pos = decode_specs(cfg, shape)
+        tshard = batch_sharding({"t": token}, mesh)["t"]
+        cshard = cache_sharding(cache, mesh, shape.global_batch)
+        jitted = jax.jit(
+            lambda p, t, c, q: step_fn(p, t, c, q),
+            in_shardings=(pshard, tshard, cshard, replicated(mesh)))
+        lowered = jitted.lower(pshapes, token, cache, pos)
+        num_tokens = shape.global_batch
+
+    compiled = lowered.compile()
+    pcount = analysis.count_params(pshapes)
+    return compiled, num_tokens, cfg, pcount, shape, notes
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            *, force=False, quiet=False):
+    mesh_name = "pod2_2x16x16" if multi_pod else "pod1_16x16"
+    out_path = os.path.join(
+        out_dir, f"dryrun_{arch}_{shape_name}_{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        if not quiet:
+            print(f"[skip-cached] {arch} {shape_name} {mesh_name}")
+        return json.load(open(out_path))
+    if (arch, shape_name) in SKIPS:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": SKIPS[(arch, shape_name)]}
+        _write(out_path, rec)
+        if not quiet:
+            print(f"[skip] {arch} {shape_name}: {SKIPS[(arch, shape_name)]}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh.devices.size
+    try:
+        from repro.kernels import ops as kops
+        from repro.sharding import set_activation_mesh
+        set_activation_mesh(mesh)
+
+        # 1. full-scale compile: sharding + memory proof (production scan)
+        kops.configure(unroll=False)
+        compiled, ntok, cfg, pcount, shape, notes = lower_combo(
+            arch, shape_name, mesh)
+        mf = analysis.model_flops(cfg, shape.kind, ntok, pcount)
+        roof_full = analysis.analyze(arch, shape_name, mesh_name, compiled,
+                                     ndev, mf, notes=notes)
+
+        # 2. depth probes (unrolled) -> affine extrapolation of the
+        #    roofline terms to true depth
+        kops.configure(unroll=True)
+        probes = []
+        for npd in (1, 2):
+            pc, pntok, pcfg, ppc, pshape, _ = lower_combo(
+                arch, shape_name, mesh, cfg=probe_cfg(cfg, npd))
+            probes.append(analysis.analyze(
+                arch, shape_name, mesh_name, pc, ndev, mf))
+        kops.configure(unroll=False)
+        roof = analysis.extrapolate(roof_full, probes[0], probes[1],
+                                    effective_periods(cfg))
+        rec = roof.to_dict()
+        rec.update({
+            "param_count": pcount,
+            "num_devices": ndev,
+            "compile_seconds": round(time.time() - t0, 1),
+            "skipped": None,
+        })
+        _write(out_path, rec)
+        if not quiet:
+            print(f"[ok] {arch:24s} {shape_name:12s} {mesh_name:14s} "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e} "
+                  f"wire/dev={rec['wire_bytes_per_device']:.3e} "
+                  f"dom={rec['dominant']:10s} "
+                  f"({rec['compile_seconds']}s)")
+        return rec
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        _write(out_path, rec)
+        print(f"[FAIL] {arch} {shape_name} {mesh_name}: "
+              f"{type(e).__name__}: {e}")
+        return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    n_fail = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_one(a, s, mp, args.out, force=args.force)
+                if rec.get("error"):
+                    n_fail += 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of FedKT's OWN step — the paper's single communication round
+at datacenter scale (beyond the 40 assigned pairs).
+
+The server holds M = n*s student models stacked on the `data` axis (one
+member per data-parallel group, TP over `model` within each group);
+``label_step`` = vmap'd greedy prediction over the public batch + the
+vocabulary-free sort-mode vote.  The cross-member vote reduction is the
+paper's "one round": we count the collectives in the lowered HLO to show
+the label exchange costs O(T) integers, NOT O(T * vocab) or O(M * params).
+
+  PYTHONPATH=src python -m repro.launch.fedkt_dryrun [--arch ...] [--members 16]
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.distill import make_label_step
+from repro.launch import analysis
+from repro.launch.dryrun import effective_periods, probe_cfg
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.sharding import set_activation_mesh
+from repro.sharding.specs import (NamedSharding, P, _path_names,
+                                  spec_for_param)
+
+
+def member_shardings(pshapes, mesh):
+    """Stacked member params: leading dim over 'data', inner spec with
+    the FSDP axis dropped (each member is TP-sharded within its group)."""
+    def f(kp, leaf):
+        inner = spec_for_param(_path_names(kp), leaf.shape[1:], mesh)
+        inner = [None if a == "data" else a for a in inner]
+        return NamedSharding(mesh, P("data", *inner))
+    return jax.tree_util.tree_map_with_path(f, pshapes)
+
+
+def lower_label_step(arch, members, B, S, mesh, cfg=None):
+    cfg = cfg or get_config(arch).replace(param_dtype="bfloat16")
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    one = jax.eval_shape(lambda: model.init(key))
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((members,) + l.shape, l.dtype), one)
+    pshard = member_shardings(stacked, mesh)
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tshard = NamedSharding(mesh, P())
+
+    step = make_label_step(model, members)
+    jitted = jax.jit(lambda mp, t: step(mp, {"tokens": t}),
+                     in_shardings=(pshard, tshard))
+    return jitted.lower(stacked, tokens).compile(), cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="phi4-mini-3.8b")
+    ap.add_argument("--members", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--out", default="benchmarks/results/fedkt_step.json")
+    args = ap.parse_args()
+
+    from repro.kernels import ops as kops
+    mesh = make_production_mesh()
+    set_activation_mesh(mesh)
+
+    # full compile: proof + memory
+    kops.configure(unroll=False)
+    compiled, cfg = lower_label_step(args.arch, args.members, args.batch,
+                                     args.seq, mesh)
+    pcount = analysis.count_params(
+        jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0))))
+    mf = analysis.model_flops(cfg, "prefill",
+                              args.batch * args.seq * args.members, pcount)
+    full = analysis.analyze(args.arch, "fedkt_label", "pod1_16x16",
+                            compiled, mesh.devices.size, mf)
+
+    # depth probes
+    kops.configure(unroll=True)
+    probes = []
+    for npd in (1, 2):
+        pc = probe_cfg(cfg, npd)
+        c, _ = lower_label_step(args.arch, args.members, args.batch,
+                                args.seq, mesh, cfg=pc)
+        probes.append(analysis.analyze(args.arch, "fedkt_label",
+                                       "pod1_16x16", c,
+                                       mesh.devices.size, mf))
+    kops.configure(unroll=False)
+    roof = analysis.extrapolate(full, probes[0], probes[1],
+                                effective_periods(cfg))
+    rec = roof.to_dict()
+    rec["members"] = args.members
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(f"[fedkt-step] {args.arch} M={args.members} B={args.batch} "
+          f"S={args.seq}: t_c={rec['t_compute']:.3f}s "
+          f"t_m={rec['t_memory']:.3f}s t_x={rec['t_collective']:.3f}s "
+          f"dom={rec['dominant']} useful={rec['useful_ratio']:.3f}")
+    print("collectives:", {k: f"{v/1e9:.2f}GB"
+                           for k, v in rec["collective"].items()})
+
+
+if __name__ == "__main__":
+    main()

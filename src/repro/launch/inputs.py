@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+No allocation happens here — these are the shapes the dry-run lowers
+against.  Modality frontends are stubbed per the assignment: llava gets
+pre-projected ``embeds`` (anyres patches), whisper gets ``frames`` (conv
+frontend output); both consume part of the nominal sequence budget.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import Model, transformer
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model), act)
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    elif cfg.frontend_embeds:
+        St = S - cfg.frontend_embeds
+        assert St > 0, "sequence shorter than frontend embeds"
+        batch["embeds"] = sds((B, cfg.frontend_embeds, cfg.d_model), act)
+        batch["tokens"] = sds((B, St), jnp.int32)
+        batch["labels"] = sds((B, St), jnp.int32)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape):
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels", None)
+    return b
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(token, cache, pos) stand-ins for one decode step with a
+    ``seq_len`` cache (window-bounded ring caches for local-attention
+    layers; recurrent layers carry O(1) states)."""
+    B, S = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=jnp.dtype(cfg.dtype)))
+    token = sds((B, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    return token, cache, pos
+
+
+def concrete_like(spec_tree, seed=0):
+    """Materialize small concrete arrays matching a spec tree (tests)."""
+    key = jax.random.PRNGKey(seed)
+
+    def f(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(f, spec_tree)

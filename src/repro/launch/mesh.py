@@ -1,0 +1,22 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run entrypoint must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist locally (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

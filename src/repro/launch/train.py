@@ -1,0 +1,169 @@
+"""Training / distillation driver.
+
+Two modes:
+  - single-host (CPU tests, examples): runs real steps on jax.devices()
+  - mesh mode: same step functions pjit'ed over the production mesh
+
+Implements the LM-scale FedKT flow: train per-party teachers on private
+shards, vote-label the public stream (one collective round), distill the
+student, then the server-side consistent-vote + final-model distillation.
+
+Usage (example scale):
+  PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
+      --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, FedKTConfig, TrainConfig, get_config,
+                           get_smoke)
+from repro.core.distill import make_label_step, make_train_step
+from repro.core.voting import consistent_vote
+from repro.data import TokenDataset, party_token_datasets, synthetic
+from repro.models import Model
+from repro import checkpoint
+
+
+def train_lm(model: Model, dataset: TokenDataset, tcfg: TrainConfig,
+             *, labels: Optional[np.ndarray] = None, params=None,
+             log_every: int = 10, extra_batch: Optional[Dict] = None,
+             verbose=True) -> Dict[str, Any]:
+    """Plain LM (or distillation, when ``labels`` given) training loop."""
+    step_fn, opt = make_train_step(model, tcfg)
+    step_fn = jax.jit(step_fn)
+    key = jax.random.PRNGKey(tcfg.seed)
+    if params is None:
+        params = model.init(key)
+    opt_state = opt.init(params)
+
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(dataset.batches(tcfg.batch_size,
+                                              steps=tcfg.steps,
+                                              labels=labels)):
+        if extra_batch:
+            batch = {**batch, **extra_batch}
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            loss = float(metrics["loss"])
+            history.append({"step": i + 1, "loss": loss})
+            if verbose:
+                print(f"  step {i+1:5d} loss {loss:.4f} "
+                      f"({time.time()-t0:.1f}s)")
+    return {"params": params, "history": history}
+
+
+def eval_lm(model: Model, params, dataset: TokenDataset, batch_size=8,
+            max_batches=8) -> float:
+    losses = []
+    for i, batch in enumerate(dataset.batches(batch_size,
+                                              steps=max_batches)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        losses.append(float(model.loss(params, batch, remat=False)))
+    return float(np.mean(losses))
+
+
+def fedkt_lm(model: Model, seqs: np.ndarray, public: np.ndarray,
+             fcfg: FedKTConfig, tcfg: TrainConfig, *, verbose=True
+             ) -> Dict[str, Any]:
+    """LM-scale FedKT: per-token voting distillation (DESIGN.md §3)."""
+    n, s, t = fcfg.num_parties, fcfg.num_partitions, fcfg.num_subsets
+    parties = party_token_datasets(seqs, n, fcfg.beta, fcfg.seed)
+    pub = TokenDataset(public, fcfg.seed)
+    pub_tokens = jnp.asarray(public[:, :-1])
+    key = jax.random.PRNGKey(fcfg.seed)
+
+    all_students = []
+    for i, pds in enumerate(parties):
+        students_i = []
+        for j in range(s):
+            # teachers: t disjoint slices of the party's sequences
+            subs = np.array_split(
+                np.random.default_rng(fcfg.seed + i * 31 + j).permutation(
+                    len(pds.seqs)), t)
+            tp = []
+            for sub in subs:
+                r = train_lm(model, TokenDataset(pds.seqs[sub]), tcfg,
+                             verbose=False)
+                tp.append(r["params"])
+            member_params = jax.tree.map(lambda *xs: jnp.stack(xs), *tp)
+            label_step = jax.jit(make_label_step(
+                model, t, gamma=fcfg.gamma
+                if fcfg.privacy_level == "L2" else 0.0))
+            key, kk = jax.random.split(key)
+            labels, gap = label_step(member_params,
+                                     {"tokens": pub_tokens}, kk)
+            r = train_lm(model, pub, tcfg, labels=np.asarray(labels),
+                         verbose=False)
+            students_i.append(r["params"])
+            if verbose:
+                print(f"party {i} partition {j}: student distilled "
+                      f"(mean vote gap {float(gap.mean()):.2f})")
+        all_students.append(students_i)
+
+    # server: consistent voting over students
+    preds = jnp.stack([
+        jnp.stack([model.predict(sp, {"tokens": pub_tokens})
+                   for sp in si]) for si in all_students])  # (n,s,B,S)
+    nn, ss, B, S = preds.shape
+    key, kk = jax.random.split(key)
+    vote = consistent_vote(
+        preds.reshape(nn, ss, B * S), model.cfg.vocab_size,
+        consistent=fcfg.consistent_voting,
+        gamma=fcfg.gamma if fcfg.privacy_level == "L1" else 0.0, key=kk)
+    final = train_lm(model, pub, tcfg,
+                     labels=np.asarray(vote.labels).reshape(B, S),
+                     verbose=False)
+    return {"final_params": final["params"], "students": all_students,
+            "vote": vote}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="phi4-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--fedkt", action="store_true",
+                    help="run the LM FedKT distillation flow")
+    ap.add_argument("--parties", type=int, default=2)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    tcfg = TrainConfig(batch_size=args.batch_size, seq_len=args.seq_len,
+                       steps=args.steps, learning_rate=args.lr)
+    data = synthetic.tokens(n_seqs=256, seq_len=args.seq_len + 1,
+                            vocab=cfg.vocab_size)
+
+    if args.fedkt:
+        fcfg = FedKTConfig(num_parties=args.parties, num_partitions=2,
+                           num_subsets=2, num_classes=cfg.vocab_size)
+        out = fedkt_lm(model, data["train"], data["public"], fcfg, tcfg)
+        params = out["final_params"]
+    else:
+        out = train_lm(model, TokenDataset(data["train"]), tcfg)
+        params = out["params"]
+
+    test_loss = eval_lm(model, params, TokenDataset(data["test"]))
+    print(f"test loss: {test_loss:.4f}")
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, params,
+                        metrics={"test_loss": test_loss})
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Whisper-style encoder-decoder LM (audio backbone, frontend stubbed).
+
+``input_specs`` supplies ``frame_embeds`` (B, encoder_seq_len, d_model) —
+the output the mel+conv frontend would produce (the assignment's one
+allowed stub).  The encoder is a non-causal transformer over frames; the
+decoder is a causal transformer with per-layer cross-attention to the
+encoder output.
+
+Documented simplification: sinusoidal positions for both encoder and
+decoder (the released decoder uses a learned 448-position table, which
+cannot express the assigned 32k decode shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _sinusoid(S, D, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / D))
+    pe = jnp.zeros((S, D), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (D + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def _init_enc_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.init_norm(cfg), "attn": L.init_attn(cfg, k1),
+            "norm2": L.init_norm(cfg), "ffn": L.init_mlp(cfg, k2)}
+
+
+def _init_dec_layer(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": L.init_norm(cfg), "attn": L.init_attn(cfg, k1),
+            "norm_x": L.init_norm(cfg), "xattn": L.init_attn(cfg, k2),
+            "norm2": L.init_norm(cfg), "ffn": L.init_mlp(cfg, k3)}
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    ekeys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dkeys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": {"table": (jax.random.normal(
+            ks[2], (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(cfg.param_dtype)},
+        "enc": jax.vmap(lambda k: _init_enc_layer(cfg, k))(ekeys),
+        "enc_norm": L.init_norm(cfg),
+        "dec": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dkeys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(cfg: ModelConfig, params, frame_embeds, *, impl="auto"):
+    """frame_embeds: (B, Se, D) from the stubbed conv frontend."""
+    x = frame_embeds.astype(cfg.dtype)
+    x = x + _sinusoid(x.shape[1], x.shape[2], x.dtype)[None]
+
+    def body(x, lp):
+        h, _ = L.attn_apply(cfg, lp["attn"],
+                            L.apply_norm(cfg, lp["norm1"], x),
+                            mode="train", causal=False, use_rope=False,
+                            impl=impl)
+        x = x + h
+        x = x + L.mlp_apply(cfg, lp["ffn"],
+                            L.apply_norm(cfg, lp["norm2"], x))
+        return x, None
+
+    from repro.kernels import ops as _ops
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=_ops.CONFIG["unroll"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def init_dec_cache(cfg: ModelConfig, batch, cache_len, enc_out=None,
+                   params=None, dtype=None):
+    """Self-attention cache + (precomputed) cross K/V for every layer."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n = cfg.num_layers
+    self_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+        L.init_attn_cache(cfg, batch, cache_len, dtype))
+    if enc_out is not None:
+        xkv = jax.vmap(lambda lp: L.cross_kv(cfg, lp["xattn"], enc_out))(
+            params["dec"])
+    else:
+        dh = cfg.head_dim_
+        z = jnp.zeros((n, batch, cfg.encoder_seq_len, cfg.num_kv_heads, dh),
+                      dtype)
+        xkv = {"k": z, "v": z}
+    return {"self": self_c, "cross": xkv}
+
+
+def decode_forward(cfg: ModelConfig, params, tokens, enc_out=None, *,
+                   mode="train", cache=None, pos=None, impl="auto",
+                   remat=True):
+    """Decoder forward.  Returns (hidden, new_cache, aux=0).
+
+    train/prefill: enc_out required; decode: cache carries cross K/V.
+    """
+    B, S = tokens.shape
+    x = params["embed"]["table"].astype(cfg.dtype)[tokens]
+    base = 0 if pos is None else pos
+    pe = _sinusoid(32_768 + 8, cfg.d_model, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, base, S, axis=0)[None]
+
+    serve = mode in ("prefill", "decode")
+    if serve and cache is None:
+        cache = init_dec_cache(cfg, B, S, enc_out, params)
+    if enc_out is not None and (cache is None or mode == "train"):
+        xkv_all = jax.vmap(lambda lp: L.cross_kv(cfg, lp["xattn"], enc_out))(
+            params["dec"])
+    else:
+        xkv_all = cache["cross"]
+
+    def body(x, xs):
+        if serve:
+            lp, sc, xkv = xs
+        else:
+            lp, sc, xkv = xs[0], None, xs[1]
+        h, nsc = L.attn_apply(cfg, lp["attn"],
+                              L.apply_norm(cfg, lp["norm1"], x),
+                              mode=mode, cache=sc, pos=pos, use_rope=False,
+                              impl=impl)
+        x = x + h
+        x = x + L.cross_attn_apply(cfg, lp["xattn"],
+                                   L.apply_norm(cfg, lp["norm_x"], x),
+                                   xkv, impl=impl)
+        x = x + L.mlp_apply(cfg, lp["ffn"],
+                            L.apply_norm(cfg, lp["norm2"], x))
+        return x, nsc
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    from repro.kernels import ops as _ops
+    xs = (params["dec"], cache["self"], xkv_all) if serve \
+        else (params["dec"], xkv_all)
+    x, new_self = jax.lax.scan(body, x, xs,
+                               unroll=_ops.CONFIG["unroll"])
+    new_cache = {"self": new_self, "cross": xkv_all} if serve else None
+    return L.apply_norm(cfg, params["final_norm"], x), new_cache, \
+        jnp.float32(0.0)

@@ -1,0 +1,200 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLPs.
+
+All modules are (init, apply) function pairs over plain dict pytrees —
+no framework.  Compute runs in ``cfg.dtype`` with f32 norms/softmax;
+parameters are stored in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, ModelConfig
+from repro.kernels import ops
+
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig):
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports stablelm-style partial rotary)
+# ---------------------------------------------------------------------------
+def apply_rope(x, positions, theta: float, pct: float = 1.0):
+    """x: (B, S, N, dh); positions: (S,) or scalar broadcastable."""
+    B, S, N, dh = x.shape
+    rot = int(dh * pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.reshape(-1, 1).astype(jnp.float32) * freqs  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA / MQA / local / softcap / cross)
+# ---------------------------------------------------------------------------
+def init_attn(cfg: ModelConfig, key, cross=False):
+    dh = cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    kv_in = cfg.d_model
+    return {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads * dh), dt),
+        "wk": dense_init(k2, (kv_in, cfg.num_kv_heads * dh), dt),
+        "wv": dense_init(k3, (kv_in, cfg.num_kv_heads * dh), dt),
+        "wo": dense_init(k4, (cfg.num_heads * dh, cfg.d_model), dt),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch, cache_len, dtype):
+    dh = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, dh), dtype),
+    }
+
+
+def attn_apply(cfg: ModelConfig, p, x, *, kind=ATTN, mode="train",
+               cache=None, pos=None, impl="auto", causal=True,
+               use_rope=True):
+    """Self-attention.  Returns (y, new_cache).
+
+    mode: "train" (no cache) | "prefill" (returns populated cache) |
+    "decode" (x is (B,1,D); cache holds cache_len entries; pos is the
+    absolute position of the new token).
+    """
+    from repro.sharding.specs import shard_heads
+    B, S, D = x.shape
+    dh = cfg.head_dim_
+    window = cfg.window if kind == ATTN_LOCAL else 0
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, dh)
+    q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
+
+    if mode in ("train", "prefill"):
+        if use_rope:
+            positions = jnp.arange(S)
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+        o = ops.attention(q, k, v, causal=causal, window=window,
+                          softcap=cfg.attn_softcap, impl=impl)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    else:  # decode
+        if use_rope:
+            positions = jnp.full((1,), pos)
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+        Lc = cache["k"].shape[1]
+        ring = window > 0 and Lc <= window
+        slot = jnp.mod(pos, Lc) if ring else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        # Ring mode (window-bounded cache): every live slot is inside the
+        # window by construction — slots fill in order 0..Lc-1 before
+        # wrapping — so the causal mask with q_offset=pos stays exact for
+        # pos < Lc and all slots are valid afterwards.  No window mask
+        # (it would wrongly mask wrapped slots); keys keep their absolute
+        # RoPE phases.
+        o = ops.attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                          causal=causal, window=0 if ring else window,
+                          softcap=cfg.attn_softcap, q_offset=pos, impl=impl)
+        new_cache = {"k": ck, "v": cv}
+
+    o = shard_heads(o)
+    y = o.reshape(B, S, cfg.num_heads * dh) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def cross_attn_apply(cfg: ModelConfig, p, x, kv_cache, *, impl="auto"):
+    """Encoder-decoder cross attention (whisper).  kv_cache: {"k","v"}
+    precomputed from encoder output; non-causal, no rope."""
+    B, S, D = x.shape
+    dh = cfg.head_dim_
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, dh)
+    o = ops.attention(q, kv_cache["k"].astype(x.dtype),
+                      kv_cache["v"].astype(x.dtype),
+                      causal=False, impl=impl)
+    return o.reshape(B, S, cfg.num_heads * dh) @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    B, S, _ = enc_out.shape
+    dh = cfg.head_dim_
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(
+        B, S, cfg.num_kv_heads, dh)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(
+        B, S, cfg.num_kv_heads, dh)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    p = {
+        "w_up": dense_init(k1, (cfg.d_model, d_ff), dt),
+        "w_down": dense_init(k2, (d_ff, cfg.d_model), dt),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k3, (cfg.d_model, d_ff), dt)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    up = x @ p["w_up"].astype(x.dtype)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.mlp == "relu2":
+        h = jax.nn.relu(up) ** 2
+    else:
+        raise ValueError(cfg.mlp)
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,154 @@
+"""Mixture-of-experts FFN with capacity-based grouped dispatch.
+
+TPU-native formulation (no dynamic shapes, no per-token scatter loops):
+
+  1. router softmax -> top-k experts per token (renormalized gates)
+  2. slot assignment: cumulative position of each (token, choice) within
+     its expert, dropped beyond capacity C = ceil(T*k*cf/E)
+  3. gather tokens into a dense (E, C, D) block -> batched expert matmuls
+     (MXU-friendly einsum over stacked expert weights)
+  4. weighted scatter-add back to (T, D)
+
+Overflow slots are routed to a sacrificial C-th column so clipping can
+never corrupt a real slot.  Under pjit the gather/scatter over the
+token-sharded axis lowers to the expected all-to-all-style collectives —
+this IS the MoE communication pattern, and it shows up in the roofline's
+collective term.
+
+DeepSeek-style shared experts run densely over all tokens and are added
+to the routed output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(cfg: ModelConfig, key):
+    m: MoEConfig = cfg.moe
+    E, D, F = m.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (D, E), dt, scale=0.02),
+        "w_up": jax.random.normal(ks[1], (E, D, F)).astype(dt) * D ** -0.5,
+        "w_down": jax.random.normal(ks[2], (E, F, D)).astype(dt) * F ** -0.5,
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (E, D, F)).astype(dt)
+                       * D ** -0.5)
+    if m.num_shared_experts:
+        Fs = m.num_shared_experts * F
+        sp = {
+            "w_up": dense_init(ks[4], (D, Fs), dt),
+            "w_down": dense_init(ks[0], (Fs, D), dt),
+        }
+        if gated:
+            sp["w_gate"] = dense_init(ks[1], (D, Fs), dt)
+        p["shared"] = sp
+    return p
+
+
+def _act(cfg: ModelConfig, p, x, h_up):
+    if cfg.mlp == "swiglu":
+        return jax.nn.silu(x) * h_up
+    if cfg.mlp == "geglu":
+        return jax.nn.gelu(x) * h_up
+    raise ValueError(cfg.mlp)
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, D).  Returns (y, aux_loss)."""
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+    gated = "w_gate" in p
+
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate, idx = jax.lax.top_k(probs, K)                      # (T, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # switch-style load-balance auxiliary loss
+    me = probs.mean(0)                                       # (E,)
+    ce = jax.nn.one_hot(idx[:, 0], E).mean(0)
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- slot assignment ----
+    C = int(-(-T * K * m.capacity_factor // E))              # ceil
+    flat_e = idx.reshape(T * K)                              # token-major
+    flat_g = gate.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (TK, E)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0), flat_e[:, None], axis=1)[:, 0] - 1
+    valid = pos < C
+    pos = jnp.where(valid, pos, C)                           # spill slot C
+    tok = jnp.arange(T * K) // K
+
+    slot_tok = jnp.zeros((E, C + 1), jnp.int32).at[flat_e, pos].set(tok)
+    slot_gate = jnp.zeros((E, C + 1), jnp.float32).at[flat_e, pos].set(
+        jnp.where(valid, flat_g, 0.0))
+    slot_tok, slot_gate = slot_tok[:, :C], slot_gate[:, :C]
+
+    # ---- expert compute ----
+    x_grp = xf[slot_tok.reshape(-1)].reshape(E, C, D)        # (E, C, D)
+    up = jnp.einsum("ecd,edf->ecf", x_grp, p["w_up"].astype(x.dtype))
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", x_grp, p["w_gate"].astype(x.dtype))
+        h = _act(cfg, p, g, up)
+    else:
+        h = jax.nn.gelu(up)
+    y_grp = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # ---- combine ----
+    y_flat = (y_grp * slot_gate[..., None].astype(x.dtype)).reshape(-1, D)
+    y = jnp.zeros((T, D), x.dtype).at[slot_tok.reshape(-1)].add(y_flat)
+
+    if "shared" in p:
+        sp = p["shared"]
+        s_up = xf @ sp["w_up"].astype(x.dtype)
+        if gated:
+            s_h = _act(cfg, sp, xf @ sp["w_gate"].astype(x.dtype), s_up)
+        else:
+            s_h = jax.nn.gelu(s_up)
+        y = y + s_h @ sp["w_down"].astype(x.dtype)
+
+    return y.reshape(B, S, D), aux
+
+
+def moe_ref(cfg: ModelConfig, p, x):
+    """Dense oracle: every expert on every token, exact top-k combine
+    (no capacity drops).  Used by tests to bound the dispatch error."""
+    m = cfg.moe
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    up = jnp.einsum("td,edf->tef", xf, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("td,edf->tef", xf, p["w_gate"].astype(x.dtype))
+        h = _act(cfg, p, g, up)
+    else:
+        h = jax.nn.gelu(up)
+    y_all = jnp.einsum("tef,efd->ted", h, p["w_down"].astype(x.dtype))
+    w = jnp.zeros(probs.shape, jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], idx].set(gate)
+    y = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), w)
+    y = y.astype(x.dtype)
+    if "shared" in p:
+        sp = p["shared"]
+        s_up = xf @ sp["w_up"].astype(x.dtype)
+        if "w_gate" in sp:
+            s_h = _act(cfg, sp, xf @ sp["w_gate"].astype(x.dtype), s_up)
+        else:
+            s_h = jax.nn.gelu(s_up)
+        y = y + s_h @ sp["w_down"].astype(x.dtype)
+    return y.reshape(B, S, D)

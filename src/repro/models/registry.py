@@ -1,0 +1,92 @@
+"""Uniform model interface over the architecture zoo.
+
+``Model`` bundles (init, hidden, loss, predict, init_cache) for one
+ModelConfig, hiding the decoder-only vs encoder-decoder split and the
+modality-frontend stubs.  Batches are plain dicts:
+
+  tokens  (B, S)  int32      — always present
+  labels  (B, S)  int32      — for loss()/distillation
+  mask    (B, S)  f32        — optional loss mask
+  embeds  (B, Se, D)         — VLM patch embeddings (llava stub)
+  frames  (B, Sf, D)         — audio frame embeddings (whisper stub)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ----
+    def init(self, key):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    # ---- forward to final hidden ----
+    def hidden(self, params, batch: Dict[str, Any], *, mode="train",
+               cache=None, pos=None, impl="auto", remat=True):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc_out = None
+            if "frames" in batch:
+                enc_out = encdec.encode(cfg, params, batch["frames"],
+                                        impl=impl)
+            return encdec.decode_forward(
+                cfg, params, batch["tokens"], enc_out, mode=mode,
+                cache=cache, pos=pos, impl=impl, remat=remat)
+        return transformer.forward(
+            cfg, params, batch["tokens"], embeds=batch.get("embeds"),
+            mode=mode, cache=cache, pos=pos, impl=impl, remat=remat)
+
+    # ---- training / distillation loss ----
+    def loss(self, params, batch, *, impl="auto", remat=True):
+        cfg = self.cfg
+        h, _, aux = self.hidden(params, batch, mode="train", impl=impl,
+                                remat=remat)
+        h = self._text_hidden(h, batch)
+        ce = transformer.lm_loss(cfg, params, h, batch["labels"],
+                                 batch.get("mask"))
+        return ce + aux
+
+    # ---- teacher vote: greedy per-token prediction ----
+    def predict(self, params, batch, *, impl="auto"):
+        h, _, _ = self.hidden(params, batch, mode="train", impl=impl,
+                              remat=False)
+        h = self._text_hidden(h, batch)
+        return transformer.predict_argmax(self.cfg, params, h)
+
+    def logits(self, params, batch, *, mode="train", cache=None, pos=None,
+               impl="auto"):
+        h, new_cache, _ = self.hidden(params, batch, mode=mode, cache=cache,
+                                      pos=pos, impl=impl, remat=False)
+        if mode == "train":
+            h = self._text_hidden(h, batch)
+        return transformer.logits_fn(self.cfg, params, h), new_cache
+
+    def _text_hidden(self, h, batch):
+        """Drop frontend positions so hidden aligns with tokens/labels."""
+        if "embeds" in batch and batch["embeds"] is not None:
+            return h[:, batch["embeds"].shape[1]:]
+        return h
+
+    # ---- serving cache ----
+    def init_cache(self, batch_size, cache_len, dtype=None,
+                   enc_out=None, params=None):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_dec_cache(self.cfg, batch_size, cache_len,
+                                         enc_out, params, dtype)
+        return transformer.init_cache(self.cfg, batch_size, cache_len,
+                                      dtype)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,93 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU).
+
+Block structure (Griffin, arXiv:2402.19427):
+    x -> W_in -> causal conv1d(width 4) -> RG-LRU -> (* gelu-gate branch)
+      -> W_out
+RG-LRU:
+    r_t = sigmoid(W_a y_t);  i_t = sigmoid(W_x y_t)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+The scan itself runs through kernels/ops.rglru (Pallas on TPU,
+associative scan on CPU).
+
+Simplification vs the released model: the gate projections W_a / W_x are
+dense rather than block-diagonal-per-head (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.kernels import ops
+
+
+def init_rglru(cfg: ModelConfig, key):
+    D = cfg.d_model
+    W = cfg.rglru_conv_width
+    ks = jax.random.split(key, 7)
+    dt = cfg.param_dtype
+    # init Lambda so that a^(c*softplus) starts in ~[0.9, 0.999]
+    a0 = jax.random.uniform(ks[0], (D,), minval=0.9, maxval=0.999)
+    z = -jnp.log(a0) / cfg.rglru_c
+    lam = jnp.log(jnp.expm1(z))
+    return {
+        "w_in": dense_init(ks[1], (D, D), dt),
+        "w_gate": dense_init(ks[2], (D, D), dt),
+        "conv_w": (jax.random.normal(ks[3], (W, D)) * W ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((D,), dt),
+        "w_a": dense_init(ks[4], (D, D), dt),
+        "w_x": dense_init(ks[5], (D, D), dt),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (D, D), dt),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch, dtype):
+    D, W = cfg.d_model, cfg.rglru_conv_width
+    return {
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, D), dtype),
+    }
+
+
+def _conv1d(p, x, state=None):
+    """Causal depthwise conv, width W.  x: (B,S,D).  state: (B,W-1,D)."""
+    W = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+            for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_apply(cfg: ModelConfig, p, x, *, mode="train", state=None,
+                impl="auto"):
+    """x: (B, S, D).  Returns (y, new_state)."""
+    B, S, D = x.shape
+    gate_branch = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+
+    y = x @ p["w_in"].astype(x.dtype)
+    conv_state = state["conv"] if state is not None else None
+    y, new_conv = _conv1d(p, y, conv_state)
+
+    yf = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(yf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(yf @ p["w_x"].astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r      # (B,S,D) < 0
+    beta = jnp.sqrt(1.0 - jnp.exp(2.0 * log_a))
+    gated_in = (beta * i * yf).astype(x.dtype)
+
+    h0 = state["h"] if state is not None else None
+    h, h_last = ops.rglru(gated_in, log_a.astype(x.dtype), h0, impl=impl)
+
+    out = (h.astype(x.dtype) * gate_branch) @ p["w_out"].astype(x.dtype)
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, new_state

@@ -1,0 +1,123 @@
+"""Small classifiers for the paper's experiments: MLP (tabular) and the
+paper's CNN (two 5x5 convs 6/16 ch + 2x2 pools + FC 120/84), plus a
+VGG-9-lite for the CelebA-style task.
+
+Interface: init(key) -> params; apply(params, X) -> logits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense(key, nin, nout):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (nin, nout)) * (nin ** -0.5),
+            "b": jnp.zeros((nout,))}
+
+
+def _conv(key, kh, kw, cin, cout):
+    k1, _ = jax.random.split(key)
+    fan = kh * kw * cin
+    return {"w": jax.random.normal(k1, (kh, kw, cin, cout)) * fan ** -0.5,
+            "b": jnp.zeros((cout,))}
+
+
+def _conv2d(p, x, stride=1, padding="VALID"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+@dataclass(frozen=True)
+class MLP:
+    """Tabular classifier: features -> hidden -> hidden -> classes."""
+    num_features: int
+    num_classes: int
+    hidden: int = 64
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"l1": _dense(k1, self.num_features, self.hidden),
+                "l2": _dense(k2, self.hidden, self.hidden),
+                "l3": _dense(k3, self.hidden, self.num_classes)}
+
+    def apply(self, p, x):
+        h = jax.nn.relu(x @ p["l1"]["w"] + p["l1"]["b"])
+        h = jax.nn.relu(h @ p["l2"]["w"] + p["l2"]["b"])
+        return h @ p["l3"]["w"] + p["l3"]["b"]
+
+
+@dataclass(frozen=True)
+class PaperCNN:
+    """The paper's MNIST/SVHN CNN (LeNet-style, §5)."""
+    image_size: int = 28
+    channels: int = 1
+    num_classes: int = 10
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        s = self.image_size
+        s = (s - 4) // 2          # conv5 + pool
+        s = (s - 4) // 2          # conv5 + pool
+        self_flat = s * s * 16
+        return {"c1": _conv(ks[0], 5, 5, self.channels, 6),
+                "c2": _conv(ks[1], 5, 5, 6, 16),
+                "f1": _dense(ks[2], self_flat, 120),
+                "f2": _dense(ks[3], 120, 84),
+                "f3": _dense(ks[4], 84, self.num_classes)}
+
+    def apply(self, p, x):
+        # x: (B, H, W, C) float32
+        h = _pool(jax.nn.relu(_conv2d(p["c1"], x)))
+        h = _pool(jax.nn.relu(_conv2d(p["c2"], h)))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p["f1"]["w"] + p["f1"]["b"])
+        h = jax.nn.relu(h @ p["f2"]["w"] + p["f2"]["b"])
+        return h @ p["f3"]["w"] + p["f3"]["b"]
+
+
+@dataclass(frozen=True)
+class VGG9Lite:
+    """Thin VGG-9 (appendix Table 12 structure, reduced widths for CPU)."""
+    image_size: int = 32
+    channels: int = 3
+    num_classes: int = 2
+    width: int = 16
+
+    def init(self, key):
+        w = self.width
+        ks = jax.random.split(key, 9)
+        s = self.image_size // 8
+        return {
+            "c1": _conv(ks[0], 3, 3, self.channels, w),
+            "c2": _conv(ks[1], 3, 3, w, 2 * w),
+            "c3": _conv(ks[2], 3, 3, 2 * w, 4 * w),
+            "c4": _conv(ks[3], 3, 3, 4 * w, 4 * w),
+            "c5": _conv(ks[4], 3, 3, 4 * w, 8 * w),
+            "c6": _conv(ks[5], 3, 3, 8 * w, 8 * w),
+            "f1": _dense(ks[6], s * s * 8 * w, 128),
+            "f2": _dense(ks[7], 128, 128),
+            "f3": _dense(ks[8], 128, self.num_classes),
+        }
+
+    def apply(self, p, x):
+        h = jax.nn.relu(_conv2d(p["c1"], x, padding="SAME"))
+        h = _pool(jax.nn.relu(_conv2d(p["c2"], h, padding="SAME")))
+        h = jax.nn.relu(_conv2d(p["c3"], h, padding="SAME"))
+        h = _pool(jax.nn.relu(_conv2d(p["c4"], h, padding="SAME")))
+        h = jax.nn.relu(_conv2d(p["c5"], h, padding="SAME"))
+        h = _pool(jax.nn.relu(_conv2d(p["c6"], h, padding="SAME")))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p["f1"]["w"] + p["f1"]["b"])
+        h = jax.nn.relu(h @ p["f2"]["w"] + p["f2"]["b"])
+        return h @ p["f3"]["w"] + p["f3"]["b"]

@@ -1,0 +1,330 @@
+"""Unified decoder-LM engine for all assigned architectures.
+
+A model is: embed -> [first_k_dense unrolled blocks] -> scan over
+``num_periods`` copies of ``cfg.pattern`` (stacked params, single trace)
+-> [tail unrolled blocks] -> final norm -> (tied) LM head.
+
+Scan-over-periods keeps the HLO size independent of depth — essential for
+compiling 46-layer configs on the CPU dry-run host — and is also the
+production choice (XLA pipelines the scanned layer).
+
+The LM head is *chunked*: loss and argmax scan over sequence chunks so the
+(B, S, vocab) logits tensor never materializes (vocab reaches 256k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, RGLRU, RWKV, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import rwkv as W
+
+HEAD_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(cfg: ModelConfig, key, kind: str, use_moe: bool,
+                dense_ff: Optional[int] = None):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.init_norm(cfg), "norm2": L.init_norm(cfg)}
+    if kind in (ATTN, ATTN_LOCAL):
+        p["attn"] = L.init_attn(cfg, ks[0])
+    elif kind == RGLRU:
+        p["rglru"] = R.init_rglru(cfg, ks[0])
+    elif kind == RWKV:
+        p["tm"] = W.init_rwkv(cfg, ks[0])
+        # rwkv channel-mix params live inside tm dict; norm2 feeds it
+        return p
+    else:
+        raise ValueError(kind)
+    if use_moe:
+        p["ffn"] = M.init_moe(cfg, ks[1])
+    else:
+        p["ffn"] = L.init_mlp(cfg, ks[1], d_ff=dense_ff)
+    if cfg.post_norm:
+        p["post_norm1"] = L.init_norm(cfg)
+        p["post_norm2"] = L.init_norm(cfg)
+    return p
+
+
+def _layer_plan(cfg: ModelConfig):
+    """(first_k_dense, num_periods, tail_kinds)."""
+    fkd = cfg.moe.first_k_dense if cfg.moe else 0
+    remaining = cfg.num_layers - fkd
+    period = len(cfg.pattern)
+    return fkd, remaining // period, cfg.pattern[:remaining % period]
+
+
+def init_params(cfg: ModelConfig, key):
+    fkd, nper, tail = _layer_plan(cfg)
+    keys = jax.random.split(key, 4 + fkd + len(tail))
+    use_moe = cfg.moe is not None
+    p = {"embed": {"table": (jax.random.normal(
+        keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+    ).astype(cfg.param_dtype)}}
+
+    dense_ff = cfg.d_ff * (cfg.moe.dense_ff_mult if use_moe else 1)
+    p["head_blocks"] = [
+        _init_block(cfg, keys[1 + i], cfg.pattern[0], use_moe=False,
+                    dense_ff=dense_ff)
+        for i in range(fkd)]
+
+    if nper:
+        def one_period(k):
+            kk = jax.random.split(k, len(cfg.pattern))
+            return {f"b{j}": _init_block(cfg, kk[j], kind, use_moe)
+                    for j, kind in enumerate(cfg.pattern)}
+        pkeys = jax.random.split(keys[1 + fkd], nper)
+        p["periods"] = jax.vmap(one_period)(pkeys)
+    p["tail"] = [
+        _init_block(cfg, keys[2 + fkd + i], kind, use_moe)
+        for i, kind in enumerate(tail)]
+
+    p["final_norm"] = L.init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": (jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab_size)) * 0.02
+        ).astype(cfg.param_dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def _init_block_cache(cfg: ModelConfig, kind, batch, cache_len, dtype):
+    if kind == ATTN_LOCAL:
+        # ring buffer: a sliding-window layer never needs more than
+        # ``window`` live keys (decode writes at pos % window)
+        return L.init_attn_cache(cfg, batch, min(cache_len, cfg.window),
+                                 dtype)
+    if kind == ATTN:
+        return L.init_attn_cache(cfg, batch, cache_len, dtype)
+    if kind == RGLRU:
+        return R.init_rglru_state(cfg, batch, dtype)
+    if kind == RWKV:
+        return W.init_rwkv_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch, cache_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    fkd, nper, tail = _layer_plan(cfg)
+    c = {"head_blocks": [
+        _init_block_cache(cfg, cfg.pattern[0], batch, cache_len, dtype)
+        for _ in range(fkd)]}
+    if nper:
+        def stack(x):
+            return jnp.broadcast_to(x[None], (nper,) + x.shape)
+        per = {f"b{j}": _init_block_cache(cfg, kind, batch, cache_len, dtype)
+               for j, kind in enumerate(cfg.pattern)}
+        c["periods"] = jax.tree.map(stack, per)
+    c["tail"] = [_init_block_cache(cfg, kind, batch, cache_len, dtype)
+                 for kind in tail]
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _apply_block(cfg: ModelConfig, kind, bp, x, *, use_moe, mode, cache,
+                 pos, impl):
+    aux = jnp.float32(0.0)
+    if kind == RWKV:
+        # (§Perf iter 4b, REVERTED: pinning the stream replicated before
+        # the norms cut all-gathers 3x but doubled peak memory — the
+        # D-sharded stream is the Pareto choice; see EXPERIMENTS.md)
+        n1 = L.apply_norm(cfg, bp["norm1"], x)
+        y, st = W.rwkv_time_mix(cfg, bp["tm"], n1, state=cache, impl=impl)
+        x = x + y
+        n2 = L.apply_norm(cfg, bp["norm2"], x)
+        y2, st_c = W.rwkv_channel_mix(cfg, bp["tm"], n2, state=cache)
+        x = x + y2
+        new_cache = None if cache is None else {
+            "wkv": st["wkv"], "shift_t": st["shift_t"], "shift_c": st_c}
+        return x, new_cache, aux
+
+    n1 = L.apply_norm(cfg, bp["norm1"], x)
+    if kind in (ATTN, ATTN_LOCAL):
+        y, new_cache = L.attn_apply(cfg, bp["attn"], n1, kind=kind,
+                                    mode=mode, cache=cache, pos=pos,
+                                    impl=impl)
+    else:  # RGLRU
+        y, new_cache = R.rglru_apply(cfg, bp["rglru"], n1, mode=mode,
+                                     state=cache, impl=impl)
+    if cfg.post_norm:
+        y = L.apply_norm(cfg, bp["post_norm1"], y)
+
+    if cfg.parallel_block:
+        m = L.mlp_apply(cfg, bp["ffn"], n1)
+        return x + y + m, new_cache, aux
+
+    x = x + y
+    n2 = L.apply_norm(cfg, bp["norm2"], x)
+    if use_moe:
+        m, aux = M.moe_apply(cfg, bp["ffn"], n2)
+    else:
+        m = L.mlp_apply(cfg, bp["ffn"], n2)
+    if cfg.post_norm:
+        m = L.apply_norm(cfg, bp["post_norm2"], m)
+    return x + m, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward -> final hidden states
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, tokens, *, embeds=None, mode="train",
+            cache=None, pos=None, impl="auto", remat=True):
+    """Returns (hidden (B,S,D), new_cache, aux_loss).
+
+    tokens: (B, St) int32.  embeds: optional (B, Se, D) modality-frontend
+    embeddings prepended to the token embeddings (VLM stub carve-out).
+    """
+    use_moe = cfg.moe is not None
+    fkd, nper, tail = _layer_plan(cfg)
+    x = params["embed"]["table"].astype(cfg.dtype)[tokens]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+
+    serve = mode in ("prefill", "decode")
+    if serve and cache is None:
+        assert mode == "prefill", "decode requires an existing cache"
+        cache = init_cache(cfg, x.shape[0], x.shape[1])
+    new_cache = {"head_blocks": [], "tail": []} if serve else None
+
+    for i in range(fkd):
+        c = cache["head_blocks"][i] if serve else None
+        x, nc, a = _apply_block(cfg, cfg.pattern[0], params["head_blocks"][i],
+                                x, use_moe=False, mode=mode, cache=c,
+                                pos=pos, impl=impl)
+        if serve:
+            new_cache["head_blocks"].append(nc)
+    aux = jnp.float32(0.0)
+
+    if nper:
+        def body(carry, xs):
+            x, aux = carry
+            if serve:
+                pp, pc = xs
+            else:
+                pp, pc = xs, {}
+            npc = {}
+            for j, kind in enumerate(cfg.pattern):
+                x, nc, a = _apply_block(
+                    cfg, kind, pp[f"b{j}"], x, use_moe=use_moe, mode=mode,
+                    cache=pc.get(f"b{j}"), pos=pos, impl=impl)
+                npc[f"b{j}"] = nc
+                aux = aux + a
+            return (x, aux), (npc if serve else None)
+
+        if remat and mode == "train":
+            body = jax.checkpoint(body)
+        from repro.kernels import ops as _ops
+        xs = (params["periods"], cache["periods"]) if serve \
+            else params["periods"]
+        (x, aux), percache = jax.lax.scan(body, (x, aux), xs,
+                                          unroll=_ops.CONFIG["unroll"])
+        if serve:
+            new_cache["periods"] = percache
+
+    for i, kind in enumerate(tail):
+        c = cache["tail"][i] if serve else None
+        x, nc, a = _apply_block(cfg, kind, params["tail"][i], x,
+                                use_moe=use_moe, mode=mode, cache=c,
+                                pos=pos, impl=impl)
+        aux = aux + a
+        if serve:
+            new_cache["tail"].append(nc)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# LM head (chunked)
+# ---------------------------------------------------------------------------
+def _head_w(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def _softcap(cfg, logits):
+    if cfg.final_softcap > 0:
+        return cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def logits_fn(cfg: ModelConfig, params, hidden):
+    """Full logits — only for small vocab / decode (B, 1, V) use."""
+    w = _head_w(cfg, params).astype(hidden.dtype)
+    return _softcap(cfg, (hidden @ w).astype(jnp.float32))
+
+
+def _chunk_scan(cfg, params, hidden, fn):
+    """Scan fn(logits_chunk) over sequence chunks of HEAD_CHUNK."""
+    B, S, D = hidden.shape
+    cs = min(HEAD_CHUNK, S)
+    if S % cs:
+        cs = S  # fall back to single chunk for ragged small cases
+    n = S // cs
+    w = _head_w(cfg, params)
+
+    def body(_, h_chunk):
+        logits = _softcap(
+            cfg, (h_chunk @ w.astype(h_chunk.dtype)).astype(jnp.float32))
+        return None, fn(logits)
+
+    from repro.kernels import ops as _ops
+    hs = hidden.reshape(B, n, cs, D).swapaxes(0, 1)
+    _, out = jax.lax.scan(jax.checkpoint(body), None, hs,
+                          unroll=_ops.CONFIG["unroll"])
+    return out, n, cs
+
+
+def lm_loss(cfg: ModelConfig, params, hidden, labels, mask=None):
+    """Mean masked cross-entropy, never materializing (B,S,V)."""
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    cs = min(HEAD_CHUNK, S)
+    if S % cs:
+        cs = S
+    n = S // cs
+    w = _head_w(cfg, params)
+    hs = hidden.reshape(B, n, cs, -1).swapaxes(0, 1)
+    ls = labels.reshape(B, n, cs).swapaxes(0, 1)
+    ms = mask.reshape(B, n, cs).swapaxes(0, 1)
+
+    def body(carry, xs):
+        h, lab, mk = xs
+        logits = _softcap(
+            cfg, (h @ w.astype(h.dtype)).astype(jnp.float32))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        lab_logit = jnp.take_along_axis(
+            logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - lab_logit) * mk
+        return (carry[0] + nll.sum(), carry[1] + mk.sum()), None
+
+    from repro.kernels import ops as _ops
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+        (hs, ls, ms), unroll=_ops.CONFIG["unroll"])
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def predict_argmax(cfg: ModelConfig, params, hidden):
+    """Greedy per-position prediction (B, S) int32 — the teacher vote."""
+    B, S, _ = hidden.shape
+    out, n, cs = _chunk_scan(
+        cfg, params, hidden,
+        lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+    return out.swapaxes(0, 1).reshape(B, S)

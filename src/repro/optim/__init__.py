@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, OptState, adamw, clip_by_global_norm, get, prox_grads, sgd,
+)
+from repro.optim.schedules import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,102 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+No optax dependency — AdamW and SGD(+momentum) are implemented directly,
+plus the FedProx proximal wrapper (adds mu*(w - w_global) to gradients)
+used by the paper's baselines and by FedKT-Prox.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment / momentum
+    nu: Any          # second moment (adam) or None-like zeros
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[..., tuple]  # (grads, state, params, lr) -> (params, state)
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.int32(0), z,
+                        jax.tree.map(jnp.zeros_like, z))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            d = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, new_v)
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum=0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.int32(0), z, jnp.int32(0))
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state.mu, params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(state.step + 1, new_m, state.nu)
+
+    return Optimizer(init, update)
+
+
+def get(name: str, weight_decay=0.0) -> Optimizer:
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay)
+    if name == "sgd":
+        return sgd()
+    if name == "sgdm":
+        return sgd(momentum=0.9)
+    raise ValueError(name)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def prox_grads(grads, params, global_params, mu: float):
+    """FedProx: g <- g + mu * (w - w_global)."""
+    return jax.tree.map(
+        lambda g, p, gp: g + mu * (p.astype(jnp.float32)
+                                   - gp.astype(jnp.float32)).astype(g.dtype),
+        grads, params, global_params)

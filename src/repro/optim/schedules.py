@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(lr, warmup_steps, total_steps, min_frac=0.1):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(s < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,239 @@
+"""Name-based sharding rules: params -> PartitionSpec.
+
+Baseline layout (DESIGN.md §6):
+  - tensor parallel over "model": column weights shard their output dim,
+    row weights shard their input dim (Megatron pairing, so the pair
+    needs one reduce per block)
+  - FSDP over "data": the *other* matmul dim of every large weight is
+    sharded over the data axis (ZeRO-3 style; XLA inserts the
+    all-gathers); optimizer state inherits the param spec, so Adam for a
+    27B model fits 16 GB chips
+  - "pod" is pure data parallelism (batch + gradient psum)
+
+Specs are right-aligned to leaf rank, so scan-stacked (periods) leaves
+pick up a leading None automatically.  Any axis that does not divide the
+dim is dropped (e.g. 24 heads on a 16-way model axis -> the flattened
+head*dh dim is sharded instead, which always divides).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weight-name classes (last path component)
+COLUMN = {"wq", "wk", "wv", "w_up", "w_gate", "w_in", "w_a", "w_x",
+          "w_r", "w_k", "w_v", "w_g", "cm_w_up", "cm_w_r", "w_lora_b"}
+ROW = {"wo", "w_down", "w_out", "cm_w_down"}
+VEC_MODEL = {"conv_b", "lam", "w0"}        # (…, D)-vectors in sharded space
+HEAD_MAJOR = {"u", "ln_scale"}             # (…, H, dh)
+REPLICATED = {"scale", "bias", "router", "mu_r", "mu_k", "mu_v", "mu_w",
+              "mu_g", "cm_mu_k", "cm_mu_r", "w_lora_a", "conv_w"}
+
+
+def _axis_fits(dim: int, mesh: Mesh, name: str) -> bool:
+    return name in mesh.shape and dim % mesh.shape[name] == 0
+
+
+def _spec(shape, mesh, *, model_dim=None, data_dim=None):
+    """Builds a PartitionSpec placing 'model'/'data' at the given
+    (negative) dims when divisible."""
+    ndim = len(shape)
+    axes = [None] * ndim
+    if model_dim is not None and _axis_fits(shape[model_dim], mesh, "model"):
+        axes[model_dim] = "model"
+    if data_dim is not None and axes[data_dim] is None \
+            and _axis_fits(shape[data_dim], mesh, "data"):
+        axes[data_dim] = "data"
+    return P(*axes)
+
+
+def spec_for_param(path: Tuple[str, ...], shape, mesh: Mesh) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    if name == "table":                      # embedding (V, D)
+        return _spec(shape, mesh, model_dim=-2, data_dim=-1)
+    if name == "w" and parent == "lm_head":  # (D, V)
+        return _spec(shape, mesh, model_dim=-1, data_dim=-2)
+    if name in COLUMN:
+        return _spec(shape, mesh, model_dim=-1, data_dim=-2)
+    if name in ROW:
+        return _spec(shape, mesh, model_dim=-2, data_dim=-1)
+    if name in VEC_MODEL:
+        return _spec(shape, mesh, model_dim=-1)
+    if name in HEAD_MAJOR:
+        return _spec(shape, mesh, model_dim=-2)
+    return P()                               # replicated
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_shardings(param_shapes, mesh: Mesh):
+    """param_shapes: pytree of ShapeDtypeStruct (from eval_shape)."""
+    def f(kp, leaf):
+        return NamedSharding(mesh, spec_for_param(_path_names(kp),
+                                                  leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, param_shapes)
+
+
+def batch_sharding(batch_shapes, mesh: Mesh):
+    """Shard the leading (batch) dim over pod+data when divisible."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def f(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dp == 0 and dp > 1:
+            return NamedSharding(mesh, P(dp_axes))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(f, batch_shapes)
+
+
+def cache_sharding(cache_shapes, mesh: Mesh, batch_size: int):
+    """KV caches (…, B, L, KV, dh) / recurrent states: batch dim (located
+    by size match — stacked period caches carry a leading layer dim) over
+    pod+data; kv-heads (or head_dim) over model."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    msize = mesh.shape.get("model", 1)
+
+    def f(leaf):
+        axes = [None] * leaf.ndim
+        bdim = None
+        if dp > 1 and batch_size % dp == 0 and batch_size >= dp:
+            for d in range(leaf.ndim):
+                if leaf.shape[d] == batch_size:
+                    axes[d] = dp_axes
+                    bdim = d
+                    break
+        if msize > 1:
+            for d in (leaf.ndim - 2, leaf.ndim - 1):
+                if 0 <= d < leaf.ndim and d != bdim \
+                        and leaf.shape[d] % msize == 0 \
+                        and leaf.shape[d] >= msize:
+                    axes[d] = "model"
+                    break
+        return NamedSharding(mesh, P(*axes))
+    return jax.tree.map(f, cache_shapes)
+
+
+def opt_state_sharding(opt_shapes, pspec_tree, mesh: Mesh):
+    """Adam mu/nu inherit the param spec; step is replicated."""
+    import jax.numpy as jnp
+
+    def f(leaf):
+        return NamedSharding(mesh, P())
+
+    # OptState(step, mu, nu) where mu/nu mirror params
+    from repro.optim import OptState
+    step_s = NamedSharding(mesh, P())
+    return OptState(step_s, pspec_tree, pspec_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set by launchers; no-op otherwise)
+# ---------------------------------------------------------------------------
+_ACT_MESH: list = [None]
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    """Launchers install the mesh so model code can pin activation
+    layouts (jax.lax.with_sharding_constraint).  Without this, GSPMD
+    replicates attention score compute whenever heads don't divide the
+    model axis (measured 16x on phi4 — EXPERIMENTS.md §Perf)."""
+    _ACT_MESH[0] = mesh
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) with per-dim divisibility
+    checks; axes entries are mesh-axis names, tuples, or None.  Any axis
+    that doesn't divide the corresponding dim is dropped."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    fixed = []
+    for d, a in enumerate(axes):
+        if a is None:
+            fixed.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        names = tuple(n for n in names if n in mesh.shape)
+        size = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+        if names and x.shape[d] % size == 0 and x.shape[d] >= size:
+            fixed.append(names if len(names) > 1 else names[0])
+        else:
+            fixed.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+DP = ("pod", "data")  # canonical data-parallel axis group
+
+
+def pregather_params(params, dtype):
+    """ZeRO-3 'gather once per step': cast params to the compute dtype
+    and pin a spec with the FSDP ('data') axis removed, so XLA issues ONE
+    bf16 all-gather per weight per step (outside the layer scan) instead
+    of per-layer f32 gathers re-issued under remat.  Differentiable: the
+    backward of the cast+constraint is the f32 reduce-scatter ZeRO wants.
+    No-op without an activation mesh."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return jax.tree.map(
+            lambda p: p.astype(dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+    def f(kp, p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        path = _path_names(kp)
+        spec = spec_for_param(path, p.shape, mesh)
+        if p.ndim >= 4:
+            # stacked MoE expert weights (periods, E, D, F): gathering
+            # the FSDP axis makes GSPMD replicate the expert einsums
+            # over `data` (measured 12x FLOPs / 326 GB on mixtral —
+            # §Perf iter 7b).  Keep the FSDP spec; cast only.
+            return jax.lax.with_sharding_constraint(
+                p.astype(dtype), NamedSharding(mesh, spec))
+        spec = P(*[None if a == "data" else a for a in spec])
+        return jax.lax.with_sharding_constraint(
+            p.astype(dtype), NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def shard_heads(x):
+    """Pin attention-tensor layout (B, S, N, dh).
+
+    Preference order: heads over 'model' (Megatron); else spread the
+    batch over every mesh axis (batch-parallel attention — heads that
+    don't divide the model axis, e.g. phi4's 24 or recurrentgemma's 10);
+    else batch over data-parallel axes only."""
+    mesh = _ACT_MESH[0]
+    if mesh is None or x.ndim != 4:
+        return x
+    B, S, N, dh = x.shape
+    msize = mesh.shape.get("model", 1)
+    if N % msize == 0 and N >= msize:
+        return constrain(x, DP, None, "model", None)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    tot = int(np.prod([mesh.shape[a] for a in all_axes]))
+    if B % tot == 0 and B >= tot:
+        return constrain(x, all_axes, None, None, None)
+    return constrain(x, DP, None, None, None)

@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see the real (single) CPU
+# device; only launch/dryrun.py requests 512 placeholder devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,20 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_smoke
+from repro.models import Model
+
+
+def test_roundtrip(tmp_path):
+    cfg = get_smoke("stablelm-3b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, params, step=7, metrics={"loss": 1.5})
+    restored = checkpoint.restore(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m = checkpoint.manifest(path)
+    assert m["step"] == 7 and m["metrics"]["loss"] == 1.5

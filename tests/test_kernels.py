@@ -1,0 +1,176 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+ATT_SHAPES = [
+    # B, Sq, Skv, H, KV, dh
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 4, 2, 64),     # GQA
+    (2, 256, 256, 8, 1, 128),    # MQA
+    (1, 384, 384, 2, 2, 128),    # non-pow2 seq (pad path)
+]
+
+
+@pytest.mark.parametrize("shape", ATT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (96, 0.0), (0, 30.0)])
+def test_flash_attention_vs_ref(shape, dtype, window, softcap):
+    B, Sq, Skv, H, KV, dh = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, dh), dtype)
+    k = _rand(ks[1], (B, Skv, KV, dh), dtype)
+    v = _rand(ks[2], (B, Skv, KV, dh), dtype)
+    out_ref = ref.attention_ref(q, k, v, causal=True, window=window,
+                                softcap=softcap)
+    out_k = ops.attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, impl="kernel_interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_xla_chunked_vs_ref(dtype):
+    B, S, H, KV, dh = 2, 320, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, S, H, dh), dtype)
+    k = _rand(ks[1], (B, S, KV, dh), dtype)
+    v = _rand(ks[2], (B, S, KV, dh), dtype)
+    out_ref = ref.attention_ref(q, k, v, causal=True, window=128)
+    out_x = ops.attention(q, k, v, causal=True, window=128, impl="xla",
+                          block_q=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_x, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_attention_decode_offset():
+    """Decode (Sq=1, q_offset) equals the last row of full attention."""
+    B, S, H, KV, dh = 2, 96, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, S, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, dh), jnp.float32)
+    full = ref.attention_ref(q, k, v, causal=True)
+    one = ops.attention(q[:, -1:], k, v, causal=True, q_offset=S - 1,
+                        impl="xla")
+    np.testing.assert_allclose(np.asarray(one[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,D", [(1, 256, 256), (2, 512, 256),
+                                   (2, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_vs_ref(B, S, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = _rand(ks[0], (B, S, D), dtype)
+    log_a = -jnp.abs(_rand(ks[1], (B, S, D), dtype)) * 0.1
+    h0 = _rand(ks[2], (B, D), jnp.float32)
+    h_ref, hl_ref = ref.rglru_scan_ref(x, log_a, h0)
+    for impl in ("kernel_interpret", "xla"):
+        h, hl = ops.rglru(x, log_a, h0, impl=impl)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(h, np.float32),
+                                   np.asarray(h_ref, np.float32),
+                                   atol=tol, rtol=tol)
+        np.testing.assert_allclose(np.asarray(hl, np.float32),
+                                   np.asarray(hl_ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,dh", [(1, 256, 2, 64), (2, 128, 4, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_vs_ref(B, S, H, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    r = _rand(ks[0], (B, S, H, dh), dtype) * 0.5
+    k = _rand(ks[1], (B, S, H, dh), dtype) * 0.5
+    v = _rand(ks[2], (B, S, H, dh), dtype) * 0.5
+    w = jax.nn.sigmoid(_rand(ks[3], (B, S, H, dh), jnp.float32)
+                       ).astype(dtype)
+    u = _rand(ks[4], (H, dh), jnp.float32) * 0.1
+    s0 = _rand(ks[5], (B, H, dh, dh), jnp.float32) * 0.1
+    o_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    o_k, s_k = ops.wkv(r, k, v, w, u, s0, impl="kernel_interpret")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_wkv_decode_step_matches_scan():
+    B, H, dh = 2, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    args = [_rand(k, (B, 3, H, dh), jnp.float32) * 0.4 for k in ks[:3]]
+    w = jax.nn.sigmoid(_rand(ks[3], (B, 3, H, dh), jnp.float32))
+    u = _rand(ks[4], (H, dh), jnp.float32) * 0.1
+    o_ref, s_ref = ref.wkv6_ref(*args, w, u)
+    s = None
+    outs = []
+    for t in range(3):
+        o, s = ops.wkv(args[0][:, t:t+1], args[1][:, t:t+1],
+                       args[2][:, t:t+1], w[:, t:t+1], u, s, impl="xla")
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(o_ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("M,T,U", [(5, 128, 512), (16, 256, 1024),
+                                   (3, 64, 10)])
+def test_vote_aggregate_vs_ref(M, T, U):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    preds = jax.random.randint(ks[0], (M, T), 0, U)
+    noise = jax.random.laplace(ks[1], (T, U)) * 0.3
+    labels_ref, counts = ref.vote_aggregate_ref(preds, U, noise)
+    for impl in ("kernel_interpret", "xla"):
+        labels, top1, top2 = ops.votes(preds, U, noise, impl=impl)
+        np.testing.assert_array_equal(np.asarray(labels),
+                                      np.asarray(labels_ref))
+        # top1 must be the noisy score of the winning class
+        scores = np.asarray(counts, np.float32) + np.asarray(noise)
+        np.testing.assert_allclose(np.asarray(top1),
+                                   scores.max(axis=1), atol=1e-4)
+
+
+def test_vote_top2_gap_clean():
+    """Without noise, top1/top2 are the two largest vote counts."""
+    preds = jnp.array([[0, 1, 2], [0, 1, 0], [0, 2, 2], [1, 1, 2]])  # (4,3)
+    labels, top1, top2 = ops.votes(preds, 4, None, impl="xla")
+    counts = np.asarray(ref.vote_aggregate_ref(preds, 4)[1])
+    srt = np.sort(counts, axis=1)
+    np.testing.assert_allclose(np.asarray(top1), srt[:, -1])
+    np.testing.assert_allclose(np.asarray(top2), srt[:, -2])
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@given(st.integers(1, 24), st.integers(1, 40), st.integers(2, 100),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_votes_sort_property(M, T, U, seed):
+    """Sort-mode voting (LM-scale path) == histogram oracle for any
+    (M, T, U), including label, top-1 and top-2 counts."""
+    rng = np.random.default_rng(seed)
+    preds = jnp.asarray(rng.integers(0, U, (M, T)), jnp.int32)
+    l_ref, counts = ref.vote_aggregate_ref(preds, U)
+    labels, top1, top2 = ops.votes_sort(preds)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(l_ref))
+    srt = np.sort(np.asarray(counts), axis=1)
+    np.testing.assert_allclose(np.asarray(top1), srt[:, -1])
+    if U >= 2:
+        np.testing.assert_allclose(np.asarray(top2), srt[:, -2])

@@ -1,0 +1,52 @@
+"""Optimizer substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw, clip_by_global_norm, prox_grads, sgd,
+                         warmup_cosine)
+
+
+def _quad_min(opt, steps=200, lr=0.1):
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, lr)
+    return float(loss(params))
+
+
+def test_adamw_minimizes_quadratic():
+    assert _quad_min(adamw()) < 1e-3
+
+
+def test_sgd_momentum_minimizes_quadratic():
+    assert _quad_min(sgd(momentum=0.9), lr=0.05) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    total = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                               for x in jax.tree.leaves(clipped))))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_prox_grads_pull_toward_global():
+    p = {"w": jnp.array(3.0)}
+    gref = {"w": jnp.array(0.0)}
+    g = {"w": jnp.array(0.0)}
+    out = prox_grads(g, p, gref, mu=0.5)
+    assert abs(float(out["w"]) - 1.5) < 1e-6
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.int32(0))) < 0.11
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-5
+    assert float(f(jnp.int32(100))) <= 0.11

@@ -1,0 +1,52 @@
+"""Partitioning invariants (hypothesis property tests)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (dirichlet_partition, homogeneous_partition,
+                                  subsets_of_partition)
+
+
+@given(st.integers(2, 10), st.floats(0.1, 10.0), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_partition_covers_disjointly(n_parties, beta, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 5, 500)
+    parts = dirichlet_partition(y, n_parties, beta, seed, min_size=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(y)
+    assert len(np.unique(allidx)) == len(y)      # disjoint cover
+
+
+def test_dirichlet_skew_increases_as_beta_shrinks():
+    y = np.random.default_rng(0).integers(0, 10, 5000)
+
+    def skew(beta):
+        parts = dirichlet_partition(y, 10, beta, seed=1, min_size=1)
+        # mean over parties of the max class fraction
+        fracs = []
+        for ix in parts:
+            c = np.bincount(y[ix], minlength=10)
+            fracs.append(c.max() / max(c.sum(), 1))
+        return np.mean(fracs)
+
+    assert skew(0.1) > skew(10.0)
+
+
+@given(st.integers(1, 4), st.integers(2, 8), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_subsets_disjoint_union(s, t, seed):
+    rng = np.random.default_rng(seed)
+    local = rng.choice(1000, size=100, replace=False)
+    plan = subsets_of_partition(local, s, t, seed)
+    assert len(plan) == s
+    for part in plan:
+        assert len(part) == t
+        allidx = np.concatenate(part)
+        assert sorted(allidx) == sorted(local)   # each partition covers all
+        assert len(np.unique(allidx)) == len(local)
+
+
+def test_homogeneous_partition():
+    parts = homogeneous_partition(103, 10, seed=0)
+    sizes = [len(p) for p in parts]
+    assert sum(sizes) == 103 and max(sizes) - min(sizes) <= 1

@@ -1,0 +1,82 @@
+"""Privacy accountant: theorem bounds, monotonicity, composition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy as P
+
+
+def test_lemma7_decreases_with_gap():
+    gaps = np.array([0.0, 1.0, 5.0, 20.0, 100.0])
+    q = P.lemma7_q(gaps, gamma=0.1, num_classes=2)
+    assert (np.diff(q) <= 1e-12).all()
+    assert q[0] <= 1.0 and q[-1] < 1e-3
+
+
+def test_lemma7_exact_matches_top2_bound_binary():
+    """For u=2 the top-2 bound and the exact histogram bound coincide."""
+    counts = np.array([[7, 3], [5, 5], [10, 0]])
+    gaps = counts.max(1) - np.sort(counts, 1)[:, -2]
+    q_top2 = P.lemma7_q(gaps, 0.2, 2)
+    q_exact = P.lemma7_q_exact(counts, 0.2)
+    np.testing.assert_allclose(q_top2, q_exact, rtol=1e-9)
+
+
+@given(st.floats(0.01, 0.2), st.integers(1, 3), st.integers(1, 50),
+       st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_eps_monotone_in_queries(gamma, s, T, seed):
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(0, 10, T).astype(float)
+    e1 = P.fedkt_l1_epsilon(gaps, gamma, s, num_classes=4)
+    e2 = P.fedkt_l1_epsilon(np.concatenate([gaps, gaps]), gamma, s,
+                            num_classes=4)
+    assert e2 >= e1 - 1e-9
+
+
+def test_eps_monotone_in_gamma():
+    gaps = np.full(50, 3.0)
+    es = [P.fedkt_l1_epsilon(gaps, g, s=2, num_classes=4)
+          for g in (0.02, 0.05, 0.1, 0.2)]
+    assert all(a <= b + 1e-9 for a, b in zip(es, es[1:]))
+
+
+def test_moments_tighter_than_advanced_composition():
+    """Paper §B.7: the data-dependent accountant beats advanced
+    composition (e.g. cod-rna: 11.2 vs 20.2)."""
+    gamma, s, T = 0.1, 1, 90
+    gaps = np.full(T, 4.0)      # modest gaps
+    eps_ma = P.fedkt_l1_epsilon(gaps, gamma, s, num_classes=2)
+    eps_adv = P.advanced_composition(2 * s * gamma, T, delta_slack=1e-5)
+    assert eps_ma < eps_adv
+
+
+def test_l2_parallel_composition_is_max():
+    g1 = np.full(20, 2.0)
+    g2 = np.full(40, 0.5)       # worse gaps, more queries
+    e_single = P.fedkt_l2_epsilon([g2], 0.05, 2)
+    e_both = P.fedkt_l2_epsilon([g1, g2], 0.05, 2)
+    assert abs(e_both - max(
+        P.fedkt_l2_epsilon([g1], 0.05, 2), e_single)) < 1e-9
+
+
+def test_theorem5_bound_used_when_q_large():
+    """When q exceeds the Thm-6 validity region, the Thm-5 (data-
+    independent) moment bound must kick in and stay finite."""
+    alpha = P.per_query_moments(np.array([0.9]), eps0=0.4)
+    assert np.isfinite(alpha).all()
+    lam = P.LAMBDAS
+    np.testing.assert_allclose(
+        alpha[0], (0.4 ** 2 / 2) * lam * (lam + 1))
+
+
+def test_tail_bound_conversion():
+    # k identical queries with the data-independent bound:
+    # alpha(l) = k * eps0^2/2 * l(l+1); eps = min_l (alpha + ln(1/d))/l
+    k, eps0, delta = 100, 0.1, 1e-5
+    alpha = P.per_query_moments(np.full(k, 1.0), eps0).sum(0)
+    eps = P.moments_to_eps(alpha, delta)
+    lam = P.LAMBDAS
+    expected = np.min((k * eps0 ** 2 / 2 * lam * (lam + 1)
+                       + np.log(1 / delta)) / lam)
+    assert abs(eps - expected) < 1e-9

@@ -1,0 +1,118 @@
+"""Voting semantics + property-based invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.voting import consistent_vote, laplace, teacher_vote
+from repro.kernels import ops, ref
+
+
+def test_consistent_voting_paper_formula():
+    """v_m(x) = s * |{i : v^i_m(x) = s}| — hand-checked example."""
+    # 3 parties, s=2 students, 1 query
+    # party 0: both say class 1 -> contributes 2 votes to class 1
+    # party 1: split (1, 2)     -> ignored
+    # party 2: both say class 0 -> contributes 2 votes to class 0
+    preds = jnp.array([[[1], [1]], [[1], [2]], [[0], [0]]])
+    vote = consistent_vote(preds, 3, consistent=True)
+    np.testing.assert_array_equal(np.asarray(vote.counts[0]), [2, 2, 0])
+    # without consistent voting: plain counts over all 6 students
+    vote2 = consistent_vote(preds, 3, consistent=False)
+    np.testing.assert_array_equal(np.asarray(vote2.counts[0]), [2, 3, 1])
+    assert int(vote2.labels[0]) == 1
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(2, 5),
+       st.integers(1, 12), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_consistent_vote_invariants(n, s, u, T, seed):
+    rng = np.random.default_rng(seed)
+    preds = jnp.asarray(rng.integers(0, u, (n, s, T)), jnp.int32)
+    vote = consistent_vote(preds, u, consistent=True)
+    counts = np.asarray(vote.counts)
+    # counts are multiples of s, and at most n*s total
+    assert (counts % s == 0).all()
+    assert (counts.sum(axis=1) <= n * s).all()
+    # labels in range
+    assert (np.asarray(vote.labels) < u).all()
+    # party permutation invariance
+    perm = rng.permutation(n)
+    vote_p = consistent_vote(preds[perm], u, consistent=True)
+    np.testing.assert_array_equal(counts, np.asarray(vote_p.counts))
+
+
+@given(st.integers(2, 6), st.integers(2, 3), st.integers(2, 5),
+       st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_party_level_sensitivity(n, s, u, T, seed):
+    """Changing ONE party's students changes each count by <= s and the
+    histogram by <= 2s in L1 — the paper's Theorem 1 sensitivity."""
+    rng = np.random.default_rng(seed)
+    preds = rng.integers(0, u, (n, s, T))
+    preds2 = preds.copy()
+    preds2[0] = rng.integers(0, u, (s, T))       # replace party 0 entirely
+    c1 = np.asarray(consistent_vote(jnp.asarray(preds), u).counts)
+    c2 = np.asarray(consistent_vote(jnp.asarray(preds2), u).counts)
+    assert np.abs(c1 - c2).max() <= s
+    assert np.abs(c1 - c2).sum(axis=1).max() <= 2 * s
+
+
+@given(st.integers(2, 20), st.integers(2, 6), st.integers(1, 16),
+       st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_teacher_vote_majority(t, u, T, seed):
+    rng = np.random.default_rng(seed)
+    preds = jnp.asarray(rng.integers(0, u, (t, T)), jnp.int32)
+    vote = teacher_vote(preds, u)
+    counts = np.asarray(vote.counts)
+    labels = np.asarray(vote.labels)
+    # winner has max count; counts total t
+    assert (counts.sum(axis=1) == t).all()
+    assert (counts[np.arange(T), labels] == counts.max(axis=1)).all()
+    # gap consistent
+    srt = np.sort(counts, axis=1)
+    np.testing.assert_allclose(np.asarray(vote.top_gap),
+                               srt[:, -1] - srt[:, -2])
+
+
+def test_laplace_statistics():
+    key = jax.random.PRNGKey(0)
+    scale = 2.5
+    x = np.asarray(laplace(key, (200_000,), scale))
+    assert abs(x.mean()) < 0.05
+    # Var(Laplace(0,b)) = 2 b^2
+    assert abs(x.var() / (2 * scale ** 2) - 1) < 0.05
+
+
+def test_noise_flips_votes_at_high_gamma_scale():
+    """Lap(1/gamma): tiny gamma (huge noise) must perturb labels;
+    huge gamma (no noise) must reproduce clean labels."""
+    rng = np.random.default_rng(0)
+    preds = jnp.asarray(rng.integers(0, 4, (9, 256)), jnp.int32)
+    clean = teacher_vote(preds, 4)
+    noisy_hi = teacher_vote(preds, 4, gamma=1e6,
+                            key=jax.random.PRNGKey(1))
+    # tied queries flip arbitrarily under any noise; compare untied ones
+    untied = np.asarray(clean.top_gap) > 0
+    assert untied.sum() > 100
+    np.testing.assert_array_equal(np.asarray(clean.labels)[untied],
+                                  np.asarray(noisy_hi.labels)[untied])
+    noisy_lo = teacher_vote(preds, 4, gamma=1e-3,
+                            key=jax.random.PRNGKey(1))
+    assert (np.asarray(noisy_lo.labels)
+            != np.asarray(clean.labels)).mean() > 0.2
+
+
+@given(st.integers(1, 64), st.integers(2, 300), st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_blocked_votes_property(M, U, seed):
+    """Property: the blocked kernel path == ref for any (M, U)."""
+    rng = np.random.default_rng(seed)
+    T = 16
+    preds = jnp.asarray(rng.integers(0, U, (M, T)), jnp.int32)
+    labels_ref, _ = ref.vote_aggregate_ref(preds, U)
+    labels, _, _ = ops.votes(preds, U, None, impl="xla")
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(labels_ref))

@@ -2,9 +2,9 @@
 initialization (paper §5.2)."""
 from __future__ import annotations
 
-from repro.core.baselines import IterConfig, run_iterative
-from repro.core.fedkt import run_fedkt
+from repro.core.baselines import IterConfig
 from repro.core.partition import dirichlet_partition
+from repro.federation import FedKTStrategy, IterativeStrategy
 
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
@@ -16,29 +16,29 @@ def run(em: Emitter, quick=True):
     parts = dirichlet_partition(task.data["y_train"], cfg.num_parties,
                                 cfg.beta, cfg.seed)
 
-    fk = run_fedkt(task.learner, task.data, cfg, party_indices=parts)
+    fk = FedKTStrategy(task.learner).run(
+        task.data, cfg, party_indices=parts)
     em.emit("fig2", task.name, "FedKT-1round", round(fk.accuracy, 4))
 
     for algo in ("fedavg", "fedprox", "scaffold"):
         lr = 1e-2 if algo == "scaffold" else 1e-3
-        out = run_iterative(task.net, task.data,
-                            IterConfig(algo=algo, rounds=rounds,
-                                       local_steps=60, lr=lr),
-                            party_indices=parts)
-        for r, acc in enumerate(out["acc_per_round"], 1):
+        out = IterativeStrategy(
+            task.net, IterConfig(algo=algo, rounds=rounds, local_steps=60,
+                                 lr=lr)).run(
+            task.data, cfg, party_indices=parts)
+        accs = out.meta["acc_per_round"]
+        for r, acc in enumerate(accs, 1):
             em.emit("fig2", task.name, f"{algo}-r{r}", round(acc, 4))
         # rounds needed to beat FedKT
-        beat = next((r + 1 for r, a in enumerate(out["acc_per_round"])
+        beat = next((r + 1 for r, a in enumerate(accs)
                      if a > fk.accuracy), None)
         em.emit("fig2", task.name, f"{algo}-rounds-to-beat-FedKT",
                 beat if beat else f">{rounds}")
 
     # FedKT-Prox: FedKT as initialization, then FedProx
-    import jax
-    init_params = fk.final_state
-    out = run_iterative(task.net, task.data,
-                        IterConfig(algo="fedprox", rounds=rounds,
-                                   local_steps=60, lr=1e-3),
-                        party_indices=parts, init_params=init_params)
-    for r, acc in enumerate(out["acc_per_round"], 1):
+    out = IterativeStrategy(
+        task.net, IterConfig(algo="fedprox", rounds=rounds, local_steps=60,
+                             lr=1e-3),
+        init_params=fk.state).run(task.data, cfg, party_indices=parts)
+    for r, acc in enumerate(out.meta["acc_per_round"], 1):
         em.emit("fig2", task.name, f"FedKT-Prox-r{r}", round(acc, 4))

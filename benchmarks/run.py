@@ -23,6 +23,7 @@ MODULES = [
     "table6_subsets",
     "table7_imbalance",
     "table10_voting",
+    "engines_bench",
     "comm_overhead",
     "roofline",
 ]

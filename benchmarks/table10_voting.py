@@ -1,5 +1,5 @@
 """Paper Table 10: effect of consistent voting (on vs off)."""
-from repro.core.fedkt import run_fedkt
+from repro.federation import FedKTSession
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
 
@@ -7,7 +7,7 @@ def run(em: Emitter, quick=True):
     for task in make_tasks(quick):
         for cv in (True, False):
             cfg = fedcfg(task, consistent_voting=cv)
-            res = run_fedkt(task.learner, task.data, cfg)
+            res = FedKTSession(task.learner, task.data, cfg).run()
             em.emit("table10", task.name,
                     "consistent" if cv else "plain",
                     round(res.accuracy, 4))

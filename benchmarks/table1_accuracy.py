@@ -1,11 +1,14 @@
 """Paper Table 1: FedKT vs SOLO / PATE / central-GBDT / FedAvg / FedProx /
-SCAFFOLD (2 rounds = equal communication, and many rounds)."""
+SCAFFOLD (2 rounds = equal communication, and many rounds).
+
+Every compared algorithm is one ``repro.federation`` Strategy run
+against the same data and party partition."""
 from __future__ import annotations
 
-from repro.core.baselines import IterConfig, run_iterative
-from repro.core.fedkt import run_fedkt, run_pate_central, run_solo
-from repro.core.learners import accuracy
+from repro.core.baselines import IterConfig
 from repro.core.partition import dirichlet_partition
+from repro.federation import (CentralPATEStrategy, FedKTStrategy,
+                              IterativeStrategy, SoloStrategy)
 
 from benchmarks.common import Emitter, fedcfg, make_tasks, tree_task
 
@@ -16,31 +19,29 @@ def run(em: Emitter, quick=True):
         cfg = fedcfg(task)
         parts = dirichlet_partition(task.data["y_train"], cfg.num_parties,
                                     cfg.beta, cfg.seed)
-        res = run_fedkt(task.learner, task.data, cfg, party_indices=parts)
-        em.emit("table1", task.name, "FedKT", round(res.accuracy, 4))
-        em.emit("table1", task.name, "SOLO",
-                round(run_solo(task.learner, task.data, cfg,
-                               party_indices=parts), 4))
-        em.emit("table1", task.name, "PATE",
-                round(run_pate_central(task.learner, task.data, cfg), 4))
+        strategies = [FedKTStrategy(task.learner, name="FedKT"),
+                      SoloStrategy(task.learner, name="SOLO"),
+                      CentralPATEStrategy(task.learner, name="PATE")]
         for algo in ("fedavg", "fedprox", "scaffold"):
             for rounds, tag in ((2, "2r"), (rounds_hi, f"{rounds_hi}r")):
                 lr = 1e-2 if algo == "scaffold" else 1e-3
-                out = run_iterative(
-                    task.net, task.data,
+                strategies.append(IterativeStrategy(
+                    task.net,
                     IterConfig(algo=algo, rounds=rounds, local_steps=60,
                                lr=lr, mu=0.1),
-                    party_indices=parts)
-                em.emit("table1", task.name, f"{algo}-{tag}",
-                        round(out["acc_per_round"][-1], 4))
+                    label=f"{algo}-{tag}"))
+        for strat in strategies:
+            res = strat.run(task.data, cfg, party_indices=parts)
+            em.emit("table1", task.name, strat.name,
+                    round(res.accuracy, 4))
 
     # model-agnostic row: GBDT (non-differentiable - FedAvg cannot run it)
     t = tree_task(quick)
     cfg = fedcfg(t)
-    res = run_fedkt(t.learner, t.data, cfg)
+    res = FedKTStrategy(t.learner).run(t.data, cfg)
     em.emit("table1", t.name, "FedKT-GBDT", round(res.accuracy, 4))
     em.emit("table1", t.name, "SOLO-GBDT",
-            round(run_solo(t.learner, t.data, cfg), 4))
+            round(SoloStrategy(t.learner).run(t.data, cfg).accuracy, 4))
     em.emit("table1", t.name, "CentralGBDT",
             round(_central(t), 4))
 

@@ -1,12 +1,13 @@
 """Paper Tables 2/14/15: differentially-private FedKT — (gamma, #queries)
 -> (epsilon, accuracy), plus the moments-accountant vs advanced-
-composition comparison (§B.7)."""
+composition comparison (§B.7).  Runs through FedKTSession, whose
+Server/Party split owns the L1/L2 accounting."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import privacy as P
-from repro.core.fedkt import run_fedkt
+from repro.federation import FedKTSession
 
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
@@ -17,10 +18,10 @@ def run(em: Emitter, quick=True):
         for gamma in gammas:
             for qf in (0.05, 0.2):
                 cfg = fedcfg(task, privacy_level=level, gamma=gamma,
-                             query_fraction=qf,
-                             num_partitions=1 if level == "L1" else 1,
+                             query_fraction=qf, num_partitions=1,
                              num_subsets=5)
-                res = run_fedkt(task.learner, task.data, cfg)
+                res = FedKTSession(task.learner, task.data,
+                                   cfg).run()
                 em.emit("table2", f"{level}-g{gamma}-q{qf}", "eps",
                         round(res.epsilon, 3))
                 em.emit("table2", f"{level}-g{gamma}-q{qf}", "acc",

@@ -1,5 +1,5 @@
 """Paper Table 5: accuracy vs number of partitions s (1..4)."""
-from repro.core.fedkt import run_fedkt
+from repro.federation import FedKTSession
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
 
@@ -7,5 +7,5 @@ def run(em: Emitter, quick=True):
     task = make_tasks(quick)[0]
     for s in (1, 2, 3) if quick else (1, 2, 3, 4, 5):
         cfg = fedcfg(task, num_partitions=s)
-        res = run_fedkt(task.learner, task.data, cfg)
+        res = FedKTSession(task.learner, task.data, cfg).run()
         em.emit("table5", f"s={s}", "acc", round(res.accuracy, 4))

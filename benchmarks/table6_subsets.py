@@ -1,5 +1,5 @@
 """Paper Table 6: accuracy vs number of teacher subsets t."""
-from repro.core.fedkt import run_fedkt
+from repro.federation import FedKTSession
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
 
@@ -7,5 +7,5 @@ def run(em: Emitter, quick=True):
     task = make_tasks(quick)[0]
     for t in (3, 5, 10) if quick else (5, 10, 15):
         cfg = fedcfg(task, num_subsets=t)
-        res = run_fedkt(task.learner, task.data, cfg)
+        res = FedKTSession(task.learner, task.data, cfg).run()
         em.emit("table6", f"t={t}", "acc", round(res.accuracy, 4))

@@ -1,8 +1,9 @@
 """Paper Table 7: heterogeneity sweep — Dirichlet beta in {0.1, 0.5, 10};
 FedKT vs SOLO and 2-round FedAvg under each."""
-from repro.core.baselines import IterConfig, run_iterative
-from repro.core.fedkt import run_fedkt, run_solo
+from repro.core.baselines import IterConfig
 from repro.core.partition import dirichlet_partition
+from repro.federation import (FedKTStrategy, IterativeStrategy,
+                              SoloStrategy)
 from benchmarks.common import Emitter, fedcfg, make_tasks
 
 
@@ -12,14 +13,14 @@ def run(em: Emitter, quick=True):
         cfg = fedcfg(task, beta=beta)
         parts = dirichlet_partition(task.data["y_train"], cfg.num_parties,
                                     beta, cfg.seed, min_size=10)
-        res = run_fedkt(task.learner, task.data, cfg, party_indices=parts)
+        res = FedKTStrategy(task.learner).run(
+            task.data, cfg, party_indices=parts)
         em.emit("table7", f"beta={beta}", "FedKT", round(res.accuracy, 4))
-        em.emit("table7", f"beta={beta}", "SOLO",
-                round(run_solo(task.learner, task.data, cfg,
-                               party_indices=parts), 4))
-        out = run_iterative(task.net, task.data,
-                            IterConfig(algo="fedavg", rounds=2,
-                                       local_steps=60),
-                            party_indices=parts)
+        solo = SoloStrategy(task.learner).run(task.data, cfg,
+                                              party_indices=parts)
+        em.emit("table7", f"beta={beta}", "SOLO", round(solo.accuracy, 4))
+        out = IterativeStrategy(
+            task.net, IterConfig(algo="fedavg", rounds=2, local_steps=60),
+            label="FedAvg-2r").run(task.data, cfg, party_indices=parts)
         em.emit("table7", f"beta={beta}", "FedAvg-2r",
-                round(out["acc_per_round"][-1], 4))
+                round(out.accuracy, 4))

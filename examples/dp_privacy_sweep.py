@@ -1,15 +1,19 @@
 """Differentially-private FedKT: the (gamma, #queries) -> (epsilon, acc)
 trade-off, with the data-dependent moments accountant (paper §4).
 
+The session owns the accounting: under L1 the Server accounts over the
+global vote histogram; under L2 each Party ships its vote-gap trace and
+the parties compose in parallel (Thm 4).
+
     PYTHONPATH=src python examples/dp_privacy_sweep.py
 """
 import numpy as np
 
 from repro.configs.base import FedKTConfig
 from repro.core import privacy as P
-from repro.core.fedkt import run_fedkt
 from repro.core.learners import NNLearner
 from repro.data.synthetic import tabular_binary
+from repro.federation import FedKTSession
 from repro.models.smallnets import MLP
 
 data = tabular_binary(n=6000, seed=0)
@@ -23,7 +27,7 @@ for level in ("L1", "L2"):
                               num_subsets=5, num_classes=2,
                               privacy_level=level, gamma=gamma,
                               query_fraction=qf)
-            res = run_fedkt(learner, data, cfg)
+            res = FedKTSession(learner, data, cfg, engine="vmap").run()
             print(f"{level:6s} {gamma:6.2f} {qf:8.2f} "
                   f"{res.epsilon:8.2f} {res.accuracy:7.3f}")
 

@@ -4,6 +4,10 @@ plus FedKT-Prox (FedKT as initialization for FedProx — paper §5.2).
 
 Local solvers follow the paper's setup: Adam(lr) for FedAvg/FedProx,
 SGD for SCAFFOLD (control-variate correction assumes SGD steps).
+
+This module holds the jit-compiled local solvers; the round
+orchestration lives in ``repro.federation.strategies.IterativeStrategy``
+(``run_iterative`` below is a deprecated wrapper over it).
 """
 from __future__ import annotations
 
@@ -15,8 +19,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.learners import _pad_pow2
-from repro.core.partition import dirichlet_partition
 from repro.optim import adamw, prox_grads
 
 
@@ -88,46 +90,19 @@ def _wavg(trees: List[Any], weights: np.ndarray):
 def run_iterative(net, data: Dict[str, np.ndarray], icfg: IterConfig, *,
                   num_parties=10, beta=0.5, party_indices=None,
                   init_params=None, eval_every=1) -> Dict[str, Any]:
-    """Runs FedAvg/FedProx/SCAFFOLD.  Returns {"acc_per_round", "params"}."""
-    key = jax.random.PRNGKey(icfg.seed + 3)
-    Xtr, ytr = data["X_train"], data["y_train"]
-    if party_indices is None:
-        party_indices = dirichlet_partition(ytr, num_parties, beta,
-                                            icfg.seed)
-    padded = [
-        _pad_pow2(Xtr[ix], ytr[ix]) for ix in party_indices]
-    sizes = np.array([len(ix) for ix in party_indices], np.float64)
+    """Deprecated wrapper over ``IterativeStrategy``.  Returns
+    {"acc_per_round", "params"}."""
+    import warnings
 
-    key, kk = jax.random.split(key)
-    g_params = init_params if init_params is not None else net.init(kk)
-    if icfg.algo == "scaffold":
-        zeros = jax.tree.map(jnp.zeros_like, g_params)
-        c_global = zeros
-        c_parties = [zeros] * len(party_indices)
+    from repro.configs.base import FedKTConfig
+    from repro.federation.strategies import IterativeStrategy
 
-    Xte, yte = jnp.asarray(data["X_test"]), np.asarray(data["y_test"])
-    accs = []
-    for r in range(icfg.rounds):
-        locals_, new_cs = [], []
-        for i, (Xp, yp, mask) in enumerate(padded):
-            key, kk = jax.random.split(key)
-            if icfg.algo == "scaffold":
-                p_i, c_i = _local_scaffold(net, icfg, kk, g_params, Xp, yp,
-                                           mask, c_global, c_parties[i])
-                new_cs.append(c_i)
-            else:
-                p_i = _local_adam(net, icfg, kk, g_params, Xp, yp, mask)
-            locals_.append(p_i)
-        g_params = _wavg(locals_, sizes)
-        if icfg.algo == "scaffold":
-            delta = [jax.tree.map(lambda a, b: a - b, cn, co)
-                     for cn, co in zip(new_cs, c_parties)]
-            c_parties = new_cs
-            c_global = jax.tree.map(
-                lambda cg, *ds: cg + sum(ds) / len(party_indices),
-                c_global, *delta)
-        if (r + 1) % eval_every == 0:
-            preds = np.asarray(
-                jnp.argmax(net.apply(g_params, Xte), -1))
-            accs.append(float((preds == yte).mean()))
-    return {"acc_per_round": accs, "params": g_params}
+    warnings.warn("run_iterative is deprecated; use "
+                  "repro.federation.IterativeStrategy instead",
+                  DeprecationWarning, stacklevel=2)
+    cfg = FedKTConfig(num_parties=num_parties, beta=beta, seed=icfg.seed)
+    res = IterativeStrategy(net, icfg, init_params=init_params,
+                            eval_every=eval_every).run(
+        data, cfg, party_indices=party_indices)
+    return {"acc_per_round": res.meta["acc_per_round"],
+            "params": res.state}

@@ -1,29 +1,31 @@
-"""FedKT — Algorithm 1, end to end.
+"""FedKT — Algorithm 1, legacy entry points.
 
-Single communication round:
-  party side : s partitions x t teachers -> vote on D_aux -> s students
-  server side: n*s students -> consistent vote on D_aux -> final model
-Privacy levels L0 / L1 (server Laplace) / L2 (party Laplace) with the
-data-dependent moments accountant from privacy.py.
+.. deprecated::
+    The single-round orchestration moved to :mod:`repro.federation`:
+    ``FedKTSession`` drives the round (with pluggable "loop"/"vmap"
+    engines), and SOLO / centralized-PATE are
+    :mod:`repro.federation.strategies`.  The functions here are thin
+    wrappers kept for source compatibility; they reproduce the original
+    results seed-for-seed (test-enforced) and will be removed once all
+    callers migrate.
 
-This module is the *small-model / generic-learner* orchestration used by
-the paper's experiments (tabular + image tasks, any Learner including
-trees).  The LM-scale sharded path lives in core/distill.py + launch/.
+This module remains the *small-model / generic-learner* path (tabular +
+image tasks, any Learner including trees).  The LM-scale sharded path
+lives in core/distill.py + launch/.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedKTConfig
-from repro.core import privacy as P
-from repro.core.learners import accuracy
-from repro.core.partition import dirichlet_partition, subsets_of_partition
-from repro.core.voting import consistent_vote, teacher_vote
+
+# NOTE: repro.federation is imported inside the wrappers — this module is
+# re-exported from repro.core.__init__, and federation's submodules import
+# their core dependencies through the same package init.
 
 
 @dataclass
@@ -36,127 +38,44 @@ class FedKTResult:
     meta: Dict[str, Any] = field(default_factory=dict)
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} instead",
+                  DeprecationWarning, stacklevel=3)
+
+
 def run_fedkt(learner, data: Dict[str, np.ndarray], cfg: FedKTConfig,
               *, student_learner=None, final_learner=None,
               party_indices=None, verbose=False) -> FedKTResult:
-    """data: X_train/y_train/X_public/(y_public)/X_test/y_test arrays.
+    """Deprecated wrapper over ``FedKTSession(engine="loop").run()``.
 
+    data: X_train/y_train/X_public/(y_public)/X_test/y_test arrays.
     ``learner`` trains the teachers; students/final default to the same
-    learner (the paper's setting).  Returns the trained final model plus
-    test accuracy and (for L1/L2) the data-dependent epsilon.
+    learner (the paper's setting).
     """
-    student_learner = student_learner or learner
-    final_learner = final_learner or learner
-    key = jax.random.PRNGKey(cfg.seed)
-    rng = np.random.default_rng(cfg.seed)
-
-    Xtr, ytr = data["X_train"], data["y_train"]
-    Xpub = data["X_public"]
-    n, s, t, u = (cfg.num_parties, cfg.num_partitions, cfg.num_subsets,
-                  cfg.num_classes)
-
-    if party_indices is None:
-        party_indices = dirichlet_partition(ytr, n, cfg.beta, cfg.seed)
-
-    # number of public queries actually labelled (DP budget knob)
-    Tq_party = len(Xpub) if cfg.privacy_level != "L2" else max(
-        1, int(len(Xpub) * cfg.query_fraction))
-    Tq_server = len(Xpub) if cfg.privacy_level != "L1" else max(
-        1, int(len(Xpub) * cfg.query_fraction))
-
-    student_states: List[List[Any]] = []
-    party_gaps: List[np.ndarray] = []          # L2 accounting
-    for i in range(n):
-        plan = subsets_of_partition(party_indices[i], s, t,
-                                    seed=cfg.seed + 17 * i)
-        students_i = []
-        gaps_i = []
-        for j in range(s):
-            teacher_states = []
-            for k_sub, sub_idx in enumerate(plan[j]):
-                key, kk = jax.random.split(key)
-                teacher_states.append(
-                    learner.fit(kk, Xtr[sub_idx], ytr[sub_idx]))
-            preds = jnp.stack([
-                learner.predict(st, Xpub[:Tq_party])
-                for st in teacher_states])              # (t, Tq)
-            key, kk = jax.random.split(key)
-            gamma = cfg.gamma if cfg.privacy_level == "L2" else 0.0
-            vote = teacher_vote(preds, u, gamma=gamma, key=kk)
-            gaps_i.append(np.asarray(vote.top_gap))
-            key, kk = jax.random.split(key)
-            students_i.append(student_learner.fit(
-                kk, Xpub[:Tq_party], np.asarray(vote.labels)))
-        student_states.append(students_i)
-        party_gaps.append(np.concatenate(gaps_i))
-        if verbose:
-            print(f"party {i}: {len(party_indices[i])} examples, "
-                  f"{s}x{t} teachers trained")
-
-    # ---- server side ----
-    student_preds = jnp.stack([
-        jnp.stack([student_learner.predict(st, Xpub[:Tq_server])
-                   for st in students_i])
-        for students_i in student_states])              # (n, s, Tq)
-    key, kk = jax.random.split(key)
-    gamma = cfg.gamma if cfg.privacy_level == "L1" else 0.0
-    vote = consistent_vote(student_preds, u,
-                           consistent=cfg.consistent_voting,
-                           gamma=gamma, key=kk)
-    key, kk = jax.random.split(key)
-    final_state = final_learner.fit(kk, Xpub[:Tq_server],
-                                    np.asarray(vote.labels))
-
-    acc = accuracy(final_learner, final_state, data["X_test"],
-                   data["y_test"])
-
-    eps = None
-    if cfg.privacy_level == "L1":
-        # party-level: gap in party units is gap/s (consistent voting
-        # moves counts in multiples of s)
-        eps = P.fedkt_l1_epsilon(
-            np.asarray(vote.counts), cfg.gamma, s, u, exact=True)
-    elif cfg.privacy_level == "L2":
-        eps = P.fedkt_l2_epsilon(party_gaps, cfg.gamma, u)
-
-    return FedKTResult(final_state=final_state, accuracy=acc,
-                       student_states=student_states, epsilon=eps,
-                       meta={"party_sizes": [len(ix) for ix in
-                                             party_indices]})
+    from repro.federation.session import FedKTSession
+    _deprecated("run_fedkt", "repro.federation.FedKTSession")
+    session = FedKTSession(learner, data, cfg,
+                           student_learner=student_learner,
+                           final_learner=final_learner, engine="loop",
+                           party_indices=party_indices)
+    res = session.run(verbose=verbose)
+    return FedKTResult(final_state=res.final_state, accuracy=res.accuracy,
+                       student_states=res.student_states,
+                       epsilon=res.epsilon, meta=res.meta)
 
 
 def run_solo(learner, data, cfg: FedKTConfig,
              party_indices=None) -> float:
-    """SOLO baseline: mean per-party local accuracy (paper Table 1)."""
-    key = jax.random.PRNGKey(cfg.seed + 1)
-    Xtr, ytr = data["X_train"], data["y_train"]
-    if party_indices is None:
-        party_indices = dirichlet_partition(ytr, cfg.num_parties, cfg.beta,
-                                            cfg.seed)
-    accs = []
-    for ix in party_indices:
-        key, kk = jax.random.split(key)
-        st = learner.fit(kk, Xtr[ix], ytr[ix])
-        accs.append(accuracy(learner, st, data["X_test"], data["y_test"]))
-    return float(np.mean(accs))
+    """Deprecated wrapper over ``SoloStrategy`` (paper Table 1)."""
+    from repro.federation.strategies import SoloStrategy
+    _deprecated("run_solo", "repro.federation.SoloStrategy")
+    return SoloStrategy(learner).run(data, cfg,
+                                     party_indices=party_indices).accuracy
 
 
 def run_pate_central(learner, data, cfg: FedKTConfig,
                      num_teachers=None) -> float:
-    """Centralized PATE upper bound (paper baseline 2): split the WHOLE
-    training set into teachers, vote on D_aux, train one student."""
-    key = jax.random.PRNGKey(cfg.seed + 2)
-    Xtr, ytr = data["X_train"], data["y_train"]
-    m = num_teachers or cfg.num_parties
-    rng = np.random.default_rng(cfg.seed)
-    perm = rng.permutation(len(Xtr))
-    states = []
-    for sub in np.array_split(perm, m):
-        key, kk = jax.random.split(key)
-        states.append(learner.fit(kk, Xtr[sub], ytr[sub]))
-    preds = jnp.stack([learner.predict(st, data["X_public"])
-                       for st in states])
-    vote = teacher_vote(preds, cfg.num_classes)
-    key, kk = jax.random.split(key)
-    st = learner.fit(kk, data["X_public"], np.asarray(vote.labels))
-    return accuracy(learner, st, data["X_test"], data["y_test"])
+    """Deprecated wrapper over ``CentralPATEStrategy``."""
+    from repro.federation.strategies import CentralPATEStrategy
+    _deprecated("run_pate_central", "repro.federation.CentralPATEStrategy")
+    return CentralPATEStrategy(learner, num_teachers).run(data, cfg).accuracy

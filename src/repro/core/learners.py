@@ -9,8 +9,8 @@ RFLearner / GBDTLearner : the JAX histogram tree learners (trees.py).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Tuple
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +20,13 @@ from repro.core import trees as T
 from repro.optim import adamw
 
 
-def _pad_pow2(X, y, min_size=32):
+def _pow2_bucket(n, min_size=32):
+    return max(min_size, 1 << (n - 1).bit_length())
+
+
+def _pad_pow2(X, y, min_size=32, bucket=None):
     n = len(X)
-    m = max(min_size, 1 << (n - 1).bit_length())
+    m = bucket or _pow2_bucket(n, min_size)
     mask = np.zeros((m,), np.float32)
     mask[:n] = 1.0
     Xp = np.zeros((m,) + X.shape[1:], X.dtype)
@@ -40,10 +44,8 @@ class NNLearner:
     batch_size: int = 64
     lr: float = 1e-3
     l2: float = 1e-6
-    sample_weights: bool = False  # unused hook
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def _fit(self, key, X, y, mask):
+    def _fit_body(self, key, X, y, mask):
         opt = adamw(weight_decay=self.l2)
         params = self.net.init(jax.random.fold_in(key, 1))
         state = opt.init(params)
@@ -67,16 +69,48 @@ class NNLearner:
         (params, _), _ = jax.lax.scan(step, (params, state), keys)
         return params
 
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fit(self, key, X, y, mask):
+        return self._fit_body(key, X, y, mask)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fit_stacked(self, keys, X, y, mask):
+        return jax.vmap(self._fit_body)(keys, X, y, mask)
+
     def fit(self, key, X, y):
         Xp, yp, mask = _pad_pow2(np.asarray(X), np.asarray(y))
         return self._fit(key, Xp, yp, mask)
 
+    def fit_stacked(self, keys, Xs, ys):
+        """Trains len(Xs) models as ONE vmap'd fit (federation vmap
+        engine).  All datasets share the largest member's pow2 bucket;
+        per-row masks keep each model's sampling distribution on its own
+        examples, so a model trained here matches its serial ``fit``
+        whenever its individual bucket equals the shared one."""
+        bucket = max(_pow2_bucket(len(X)) for X in Xs)
+        padded = [_pad_pow2(np.asarray(X), np.asarray(y), bucket=bucket)
+                  for X, y in zip(Xs, ys)]
+        Xp, yp, mask = (jnp.stack([p[i] for p in padded])
+                        for i in range(3))
+        return self._fit_stacked(jnp.asarray(keys), Xp, yp, mask)
+
+    def _predict_body(self, state, X):
+        return jnp.argmax(self.net.apply(state, X), -1).astype(jnp.int32)
+
     @functools.partial(jax.jit, static_argnums=0)
     def _predict(self, state, X):
-        return jnp.argmax(self.net.apply(state, X), -1).astype(jnp.int32)
+        return self._predict_body(state, X)
 
     def predict(self, state, X):
         return self._predict(state, jnp.asarray(X))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _predict_stacked(self, states, X):
+        return jax.vmap(lambda st: self._predict_body(st, X))(states)
+
+    def predict_stacked(self, states, X):
+        """(k, T) predictions of k stacked models on one shared X."""
+        return self._predict_stacked(states, jnp.asarray(X))
 
 
 @dataclass(frozen=True)

@@ -124,9 +124,11 @@ class RandomForest:
         xb = binize(X, edges)
         N, F = xb.shape
         kb, kf = jax.random.split(key)
-        # bootstrap via multinomial counts as sample weights
-        w = jax.random.multinomial(
-            kb, N, jnp.full((self.num_trees, N), 1.0 / N)).astype(jnp.float32)
+        # bootstrap via draw-with-replacement counts as sample weights
+        # (multinomial(N, uniform) == histogram of N uniform draws)
+        idx = jax.random.randint(kb, (self.num_trees, N), 0, N)
+        w = jax.vmap(lambda r: jnp.bincount(r, length=N))(idx).astype(
+            jnp.float32)
         fm = (jax.random.uniform(kf, (self.num_trees, F))
               < self.feature_frac).astype(jnp.float32)
         fm = jnp.maximum(fm, jnp.zeros_like(fm).at[:, 0].set(1.0))

@@ -1,0 +1,20 @@
+"""Federation API: FedKT's one-round protocol, decoupled from execution.
+
+    Party / Server / FedKTSession  — the protocol (who sends what, once)
+    engines.LoopEngine / VmapEngine — how teachers train (pluggable)
+    strategies.*                    — every compared algorithm, one shape
+
+See session.FedKTSession for the entry point.
+"""
+from repro.federation.engines import (Engine, LoopEngine,  # noqa: F401
+                                      VmapEngine, get_engine)
+from repro.federation.messages import (PartyUpdate,  # noqa: F401
+                                       RoundResult, label_wire_bytes,
+                                       pytree_bytes)
+from repro.federation.party import Party  # noqa: F401
+from repro.federation.server import Server  # noqa: F401
+from repro.federation.session import FedKTSession, query_budget  # noqa: F401
+from repro.federation.strategies import (CentralPATEStrategy,  # noqa: F401
+                                         FedKTStrategy, IterativeStrategy,
+                                         SoloStrategy, Strategy,
+                                         StrategyResult)

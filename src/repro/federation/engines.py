@@ -1,0 +1,105 @@
+"""Execution engines: HOW a party's teachers get trained and queried.
+
+The protocol (who sends what, once) lives in party.py / server.py /
+session.py; an Engine only decides how a batch of teachers is fit and
+how a trained bank predicts the public queries:
+
+  LoopEngine : one ``learner.fit`` per teacher, serially — the seed
+               semantics of the original ``run_fedkt`` loop.
+  VmapEngine : stacks all given teachers into one ``jax.vmap``-ed fit
+               over a shared pow2-padded bucket.  The Party hands it
+               its full s*t teacher grid, so the n*s*t sequential jit
+               dispatches of the serial loop collapse to one batched
+               dispatch per party — the headline wall-clock win (see
+               BENCH_federation_engines.json).
+
+PRNG contract: engines never split keys.  The Party precomputes the
+legacy loop's exact key schedule (one split per teacher, in partition/
+subset order) and passes one key per teacher, so switching engines
+never changes which key a teacher sees.  When every subset pads to the
+same pow2 bucket the two engines are bit-identical; otherwise they may
+differ in trailing pad size and are only required to agree on vote
+labels (test-enforced).
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine(Protocol):
+    """Pluggable teacher-execution backend."""
+    name: str
+
+    def fit_teachers(self, keys: Sequence[Any], learner,
+                     datasets: Sequence[Tuple[Any, Any]]) -> Any:
+        """Trains one teacher per (X, y) dataset with the paired key.
+        Returns an opaque teacher bank."""
+        ...
+
+    def slice_bank(self, bank, start: int, stop: int) -> Any:
+        """The sub-bank holding teachers [start, stop)."""
+        ...
+
+    def predict_teachers(self, learner, bank, X) -> jnp.ndarray:
+        """Predictions of every teacher in the bank: (t, T) int32."""
+        ...
+
+
+class LoopEngine:
+    """Serial reference engine (seed semantics of the legacy loop)."""
+    name = "loop"
+
+    def fit_teachers(self, keys, learner, datasets):
+        return [learner.fit(kk, X, y)
+                for kk, (X, y) in zip(keys, datasets)]
+
+    def slice_bank(self, bank, start, stop):
+        return bank[start:stop]
+
+    def predict_teachers(self, learner, bank, X):
+        return jnp.stack([learner.predict(st, X) for st in bank])
+
+
+class VmapEngine:
+    """Batched engine: one vmap'd fit over the stacked teacher grid.
+
+    Learners opt in by providing ``fit_stacked(keys, Xs, ys)`` /
+    ``predict_stacked(states, X)`` (see NNLearner); learners without the
+    hooks (e.g. the histogram tree learners) fall back to the serial
+    path with identical keys, so mixing learner kinds stays correct.
+    """
+    name = "vmap"
+
+    def fit_teachers(self, keys, learner, datasets):
+        if not hasattr(learner, "fit_stacked"):
+            return [learner.fit(kk, X, y)
+                    for kk, (X, y) in zip(keys, datasets)]
+        return learner.fit_stacked(jnp.stack(list(keys)),
+                                   [X for X, _ in datasets],
+                                   [y for _, y in datasets])
+
+    def slice_bank(self, bank, start, stop):
+        if isinstance(bank, list):                 # serial fallback
+            return bank[start:stop]
+        return jax.tree.map(lambda leaf: leaf[start:stop], bank)
+
+    def predict_teachers(self, learner, bank, X):
+        if isinstance(bank, list):                 # serial fallback
+            return jnp.stack([learner.predict(st, X) for st in bank])
+        return learner.predict_stacked(bank, X)
+
+
+_ENGINES = {"loop": LoopEngine, "vmap": VmapEngine}
+
+
+def get_engine(engine) -> Engine:
+    """Engine instance from a name ("loop" | "vmap") or pass-through."""
+    if isinstance(engine, str):
+        if engine not in _ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"available: {sorted(_ENGINES)}")
+        return _ENGINES[engine]()
+    return engine

@@ -1,0 +1,68 @@
+"""Wire-level types of the FedKT protocol.
+
+The one-shot protocol exchanges exactly one message kind per direction:
+
+  PartyUpdate : party -> server, ONCE.  The party's s student states
+                plus the clean vote-gap trace the L2 accountant needs.
+                Never raw data, never teacher states — this is the
+                paper's privacy boundary and its communication bound
+                (n * s models on the wire, total).
+  RoundResult : server -> caller.  Final model, accounting, metrics.
+
+Keeping these as plain dataclasses over pytrees makes the next steps
+(cross-process serialization, async parties) a transport concern, not
+an algorithm change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+LABEL_BYTES = 4   # int32 vote labels — the server->party query answer unit
+
+
+def pytree_bytes(tree: Any) -> int:
+    """On-the-wire size of a state pytree (sum of array leaf bytes).
+    Works on concrete arrays and on ShapeDtypeStructs (abstract lowering,
+    launch/fedkt_dryrun.py)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += (int(np.prod(leaf.shape, dtype=np.int64))
+                      * np.dtype(leaf.dtype).itemsize)
+    return int(total)
+
+
+def label_wire_bytes(num_queries: int) -> int:
+    """Cost of shipping vote labels for ``num_queries`` public examples:
+    O(T) integers — independent of vocab/class count and of model size."""
+    return num_queries * LABEL_BYTES
+
+
+@dataclass
+class PartyUpdate:
+    """Everything a party sends to the server in the single round."""
+    party_id: int
+    student_states: List[Any]          # s trained student pytrees
+    vote_gaps: np.ndarray              # concat clean top-2 gaps (L2 acct)
+    num_examples: int                  # local dataset size (for metrics)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def wire_bytes(self) -> int:
+        """Bytes this update puts on the wire (student states only: the
+        gap trace stays party-side under L2; it is included here for the
+        trusted-aggregator L1 setting where the server accounts)."""
+        return pytree_bytes(self.student_states)
+
+
+@dataclass
+class RoundResult:
+    """Outcome of one FedKT round, as produced by the session driver."""
+    final_state: Any
+    accuracy: float
+    student_states: List[List[Any]]    # [party][partition] -> state
+    epsilon: Optional[float] = None
+    meta: Dict[str, Any] = field(default_factory=dict)

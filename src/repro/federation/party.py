@@ -1,0 +1,92 @@
+"""Party: the data-holder side of the FedKT protocol (Algorithm 1
+lines 2-12).
+
+A party never shares raw examples or teacher models.  Its entire
+contribution to the round is one PartyUpdate: s student models, each
+distilled from a t-teacher ensemble vote on the public queries, plus
+(under L2) the vote-gap trace its local accountant needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedKTConfig
+from repro.core.partition import subsets_of_partition
+from repro.core.voting import teacher_vote
+from repro.federation.engines import Engine
+from repro.federation.messages import PartyUpdate
+
+
+@dataclass
+class Party:
+    """One silo.  ``indices`` selects its local shard of the (conceptually
+    party-private) training arrays; in a deployed setting X/y would be
+    the silo's own storage and ``indices`` the identity."""
+    party_id: int
+    X: np.ndarray
+    y: np.ndarray
+    indices: np.ndarray
+    cfg: FedKTConfig
+    learner: Any
+    student_learner: Any
+
+    @property
+    def num_examples(self) -> int:
+        return len(self.indices)
+
+    def _key_schedule(self, key, s: int, t: int):
+        """The legacy loop's exact split order: per partition j, t
+        teacher keys, then one vote key, then one student key.  Played
+        forward here so engines get explicit keys and can batch the
+        whole s*t teacher grid without changing any teacher's seed."""
+        teacher_keys, vote_keys, student_keys = [], [], []
+        for _ in range(s):
+            for _ in range(t):
+                key, kk = jax.random.split(key)
+                teacher_keys.append(kk)
+            key, kk = jax.random.split(key)
+            vote_keys.append(kk)
+            key, kk = jax.random.split(key)
+            student_keys.append(kk)
+        return teacher_keys, vote_keys, student_keys, key
+
+    def local_round(self, key, X_public, num_queries: int, engine: Engine):
+        """Runs the party side of the single round.
+
+        Returns (PartyUpdate, advanced key).  Key threading matches the
+        legacy ``run_fedkt`` loop split-for-split, so results are
+        seed-for-seed reproducible across API versions and engines.
+        """
+        cfg = self.cfg
+        s, t, u = cfg.num_partitions, cfg.num_subsets, cfg.num_classes
+        Xq = X_public[:num_queries]
+        plan = subsets_of_partition(self.indices, s, t,
+                                    seed=cfg.seed + 17 * self.party_id)
+        gamma = cfg.gamma if cfg.privacy_level == "L2" else 0.0
+
+        teacher_keys, vote_keys, student_keys, key = \
+            self._key_schedule(key, s, t)
+        datasets = [(self.X[sub], self.y[sub])
+                    for j in range(s) for sub in plan[j]]
+        bank = engine.fit_teachers(teacher_keys, self.learner, datasets)
+
+        students: List[Any] = []
+        gaps: List[np.ndarray] = []
+        for j in range(s):
+            bank_j = engine.slice_bank(bank, j * t, (j + 1) * t)
+            preds = engine.predict_teachers(self.learner, bank_j, Xq)
+            vote = teacher_vote(preds, u, gamma=gamma, key=vote_keys[j])
+            gaps.append(np.asarray(vote.top_gap))
+            students.append(self.student_learner.fit(
+                student_keys[j], Xq, np.asarray(vote.labels)))
+
+        update = PartyUpdate(party_id=self.party_id,
+                             student_states=students,
+                             vote_gaps=np.concatenate(gaps),
+                             num_examples=self.num_examples,
+                             meta={"num_teachers": s * t})
+        return update, key

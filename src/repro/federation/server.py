@@ -1,0 +1,67 @@
+"""Server: the aggregator side of the FedKT protocol (Algorithm 1
+lines 13-23).
+
+Collects the n PartyUpdates, runs the consistent vote over the n*s
+student models, distills the final model from the voted labels, and —
+being the only place that sees the global vote histogram — owns the
+L1 privacy accounting.  L2 accounting composes the parties' local gap
+traces (Thm 4 parallel composition).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedKTConfig
+from repro.core import privacy as P
+from repro.core.voting import VoteResult, consistent_vote
+from repro.federation.messages import PartyUpdate
+
+
+class Server:
+    def __init__(self, cfg: FedKTConfig, student_learner, final_learner):
+        self.cfg = cfg
+        self.student_learner = student_learner
+        self.final_learner = final_learner
+
+    def aggregate(self, key, updates: Sequence[PartyUpdate], X_public,
+                  num_queries: int):
+        """Consistent vote over all student models + final distillation.
+
+        Returns (final_state, VoteResult, advanced key).
+        """
+        cfg = self.cfg
+        Xq = X_public[:num_queries]
+        student_preds = jnp.stack([
+            jnp.stack([self.student_learner.predict(st, Xq)
+                       for st in upd.student_states])
+            for upd in updates])                      # (n, s, Tq)
+        key, kk = jax.random.split(key)
+        gamma = cfg.gamma if cfg.privacy_level == "L1" else 0.0
+        vote = consistent_vote(student_preds, cfg.num_classes,
+                               consistent=cfg.consistent_voting,
+                               gamma=gamma, key=kk)
+        key, kk = jax.random.split(key)
+        final_state = self.final_learner.fit(kk, Xq,
+                                             np.asarray(vote.labels))
+        return final_state, vote, key
+
+    def epsilon(self, vote: VoteResult,
+                updates: Sequence[PartyUpdate]) -> Optional[float]:
+        """Data-dependent (eps, delta=1e-5) bound for the configured
+        privacy level; None under L0."""
+        cfg = self.cfg
+        if cfg.privacy_level == "L1":
+            # party-level: consistent voting moves counts in multiples
+            # of s, so the accountant works on the raw histogram with
+            # sensitivity 2s (privacy.py Thm 1+2)
+            return P.fedkt_l1_epsilon(np.asarray(vote.counts), cfg.gamma,
+                                      cfg.num_partitions, cfg.num_classes,
+                                      exact=True)
+        if cfg.privacy_level == "L2":
+            return P.fedkt_l2_epsilon([u.vote_gaps for u in updates],
+                                      cfg.gamma, cfg.num_classes)
+        return None

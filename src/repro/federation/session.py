@@ -1,0 +1,112 @@
+"""FedKTSession: drives the paper's single communication round.
+
+The session owns everything that spans the party/server boundary —
+PRNG threading, the query-budget split, privacy accounting, and round
+metrics — while Party/Server own their protocol sides and an Engine
+owns teacher execution.  One session == one round == one result:
+
+    session = FedKTSession(learner, data, cfg, engine="vmap")
+    result = session.run()        # RoundResult
+
+Seed contract: with ``engine="loop"`` the session reproduces the legacy
+``run_fedkt`` accuracy and epsilon bit-for-bit at a fixed cfg.seed
+(test-enforced in tests/test_federation.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedKTConfig
+from repro.core.learners import accuracy
+from repro.core.partition import dirichlet_partition
+from repro.federation.engines import get_engine
+from repro.federation.messages import (PartyUpdate, RoundResult,
+                                       label_wire_bytes)
+from repro.federation.party import Party
+from repro.federation.server import Server
+
+
+def query_budget(cfg: FedKTConfig, num_public: int):
+    """(party, server) query counts.  The noised side of the protocol
+    answers only a ``query_fraction`` of D_aux — the DP budget knob."""
+    frac = max(1, int(num_public * cfg.query_fraction))
+    tq_party = num_public if cfg.privacy_level != "L2" else frac
+    tq_server = num_public if cfg.privacy_level != "L1" else frac
+    return tq_party, tq_server
+
+
+class FedKTSession:
+    """One FedKT round over in-process array data.
+
+    data: dict with X_train/y_train/X_public/X_test/y_test arrays.
+    engine: "loop" | "vmap" | an engines.Engine instance.
+    """
+
+    def __init__(self, learner, data: Dict[str, np.ndarray],
+                 cfg: FedKTConfig, *, student_learner=None,
+                 final_learner=None, engine="loop", party_indices=None):
+        self.learner = learner
+        self.student_learner = student_learner or learner
+        self.final_learner = final_learner or learner
+        self.data = data
+        self.cfg = cfg
+        self.engine = get_engine(engine)
+
+        ytr = data["y_train"]
+        if party_indices is None:
+            party_indices = dirichlet_partition(ytr, cfg.num_parties,
+                                                cfg.beta, cfg.seed)
+        self.parties = [
+            Party(party_id=i, X=data["X_train"], y=ytr, indices=ix,
+                  cfg=cfg, learner=self.learner,
+                  student_learner=self.student_learner)
+            for i, ix in enumerate(party_indices)]
+        self.server = Server(cfg, self.student_learner, self.final_learner)
+        self.tq_party, self.tq_server = query_budget(cfg,
+                                                     len(data["X_public"]))
+
+    def run(self, verbose: bool = False) -> RoundResult:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        Xpub = self.data["X_public"]
+
+        t0 = time.time()
+        updates: List[PartyUpdate] = []
+        for party in self.parties:
+            upd, key = party.local_round(key, Xpub, self.tq_party,
+                                         self.engine)
+            updates.append(upd)
+            if verbose:
+                print(f"party {party.party_id}: {party.num_examples} "
+                      f"examples, {cfg.num_partitions}x{cfg.num_subsets} "
+                      f"teachers trained")
+        t_parties = time.time() - t0
+
+        t0 = time.time()
+        final_state, vote, key = self.server.aggregate(
+            key, updates, Xpub, self.tq_server)
+        t_server = time.time() - t0
+
+        acc = accuracy(self.final_learner, final_state,
+                       self.data["X_test"], self.data["y_test"])
+        eps = self.server.epsilon(vote, updates)
+
+        meta: Dict[str, Any] = {
+            "party_sizes": [p.num_examples for p in self.parties],
+            "engine": self.engine.name,
+            "queries": {"party": self.tq_party, "server": self.tq_server},
+            "seconds": {"parties": round(t_parties, 3),
+                        "server": round(t_server, 3)},
+            "wire_bytes": {
+                "updates": int(sum(u.wire_bytes() for u in updates)),
+                "labels": label_wire_bytes(self.tq_party) * len(updates),
+            },
+        }
+        return RoundResult(final_state=final_state, accuracy=acc,
+                           student_states=[u.student_states
+                                           for u in updates],
+                           epsilon=eps, meta=meta)

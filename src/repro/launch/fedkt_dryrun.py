@@ -11,6 +11,12 @@ vocabulary-free sort-mode vote.  The cross-member vote reduction is the
 paper's "one round": we count the collectives in the lowered HLO to show
 the label exchange costs O(T) integers, NOT O(T * vocab) or O(M * params).
 
+This is the LM-scale execution of the same protocol that
+``repro.federation`` drives for in-process learners: one stacked member
+here == one ``PartyUpdate`` student state there, and the recorded
+"protocol" section prices both message kinds with
+``repro.federation.messages`` so the two paths stay comparable.
+
   PYTHONPATH=src python -m repro.launch.fedkt_dryrun [--arch ...] [--members 16]
 """
 import argparse
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.distill import make_label_step
+from repro.federation.messages import label_wire_bytes, pytree_bytes
 from repro.launch import analysis
 from repro.launch.dryrun import effective_periods, probe_cfg
 from repro.launch.mesh import make_production_mesh
@@ -96,6 +103,16 @@ def main():
                                 effective_periods(cfg))
     rec = roof.to_dict()
     rec["members"] = args.members
+    # the one-round protocol cost, priced like a federation PartyUpdate:
+    # each member ships its student state once; vote labels come back as
+    # O(T) integers regardless of vocab or member count
+    one_member = jax.eval_shape(lambda: Model(cfg).init(
+        jax.random.PRNGKey(0)))
+    rec["protocol"] = {
+        "members": args.members,
+        "update_bytes_per_member": pytree_bytes(one_member),
+        "label_bytes": label_wire_bytes(args.batch * args.seq),
+    }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1, default=str)
@@ -105,6 +122,9 @@ def main():
           f"dom={rec['dominant']} useful={rec['useful_ratio']:.3f}")
     print("collectives:", {k: f"{v/1e9:.2f}GB"
                            for k, v in rec["collective"].items()})
+    pr = rec["protocol"]
+    print(f"protocol: {pr['update_bytes_per_member']/1e9:.2f}GB/member up "
+          f"(once), {pr['label_bytes']/1e6:.1f}MB labels down")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,6 @@ def serve_batch(model: Model, params, prompts: np.ndarray, gen: int,
                 cache_len: int = 0, extra=None, verbose=True):
     """prompts: (B, P) int32.  Returns (B, gen) generated tokens."""
     B, P = prompts.shape
-    cache_len = max(cache_len, P + gen)
     cfg = model.cfg
 
     prefill = jax.jit(make_prefill_step(model))
@@ -36,16 +35,11 @@ def serve_batch(model: Model, params, prompts: np.ndarray, gen: int,
         batch.update(extra)
     t0 = time.time()
     logits, cache = prefill(params, batch)
-    # grow the self-attention caches to cache_len
-    def grow(leaf, target=cache_len):
-        # KV caches have a length dim == P (prefill length)
-        for d in range(leaf.ndim):
-            if leaf.shape[d] == P and leaf.ndim >= 3:
-                pad = [(0, 0)] * leaf.ndim
-                pad[d] = (0, target - P)
-                return jnp.pad(leaf, pad)
-        return leaf
-    cache = jax.tree.map(grow, cache)
+    # grow the self-attention caches: room for the gen decode steps (or
+    # a caller-requested total cache_len).  Model.grow_cache knows which
+    # leaves carry the tagged cache-length dim, so dims that merely
+    # equal the prefill length (batch, conv state, cross K/V) are safe.
+    cache = model.grow_cache(cache, max(gen, cache_len - P))
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     t_prefill = time.time() - t0
 

@@ -97,6 +97,16 @@ def init_dec_cache(cfg: ModelConfig, batch, cache_len, enc_out=None,
     return {"self": self_c, "cross": xkv}
 
 
+def grow_cache(cfg: ModelConfig, cache, extra_tokens: int):
+    """Grows the decoder self-attention cache by ``extra_tokens`` slots.
+    The cross K/V covers the (fixed) encoder sequence and never grows —
+    its length dim must not be confused with the prefill length."""
+    leaf = cache["self"]["k"]
+    cur = leaf.shape[leaf.ndim + L.ATTN_CACHE_LEN_AXIS]
+    return {"self": L.grow_attn_cache(cache["self"], cur + extra_tokens),
+            "cross": cache["cross"]}
+
+
 def decode_forward(cfg: ModelConfig, params, tokens, enc_out=None, *,
                    mode="train", cache=None, pos=None, impl="auto",
                    remat=True):

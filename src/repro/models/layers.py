@@ -84,12 +84,32 @@ def init_attn(cfg: ModelConfig, key, cross=False):
     }
 
 
+# KV caches are built here and only here.  The cache-length dim is
+# tagged by its position from the END so growth code never guesses it
+# from sizes (stacked caches add leading dims: (layers, B, L, KV, dh)).
+ATTN_CACHE_LEN_AXIS = -3
+
+
 def init_attn_cache(cfg: ModelConfig, batch, cache_len, dtype):
     dh = cfg.head_dim_
     return {
         "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, dh), dtype),
         "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, dh), dtype),
     }
+
+
+def grow_attn_cache(cache, target_len):
+    """Pads one {"k","v"} cache to ``target_len`` along the tagged
+    length axis (no-op if already that long)."""
+    def pad(leaf):
+        axis = leaf.ndim + ATTN_CACHE_LEN_AXIS
+        cur = leaf.shape[axis]
+        if cur >= target_len:
+            return leaf
+        pads = [(0, 0)] * leaf.ndim
+        pads[axis] = (0, target_len - cur)
+        return jnp.pad(leaf, pads)
+    return jax.tree.map(pad, cache)
 
 
 def attn_apply(cfg: ModelConfig, p, x, *, kind=ATTN, mode="train",

@@ -72,6 +72,15 @@ class Model:
             h = self._text_hidden(h, batch)
         return transformer.logits_fn(self.cfg, params, h), new_cache
 
+    # ---- serving: make room for more decode steps ----
+    def grow_cache(self, cache, extra_tokens: int):
+        """Returns ``cache`` with every self-attention KV buffer grown
+        by ``extra_tokens`` slots along its tagged length dim (recurrent
+        state and encoder cross-K/V pass through untouched)."""
+        if self.cfg.is_encoder_decoder:
+            return encdec.grow_cache(self.cfg, cache, extra_tokens)
+        return transformer.grow_cache(self.cfg, cache, extra_tokens)
+
     def _text_hidden(self, h, batch):
         """Drop frontend positions so hidden aligns with tokens/labels."""
         if "embeds" in batch and batch["embeds"] is not None:

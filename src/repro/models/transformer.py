@@ -131,6 +131,35 @@ def init_cache(cfg: ModelConfig, batch, cache_len, dtype=None):
     return c
 
 
+def grow_cache(cfg: ModelConfig, cache, extra_tokens: int):
+    """Grows every self-attention KV cache by ``extra_tokens`` decode
+    slots.  Walks the same layer plan as ``init_cache``, so it knows
+    which blocks are attention (grow along the tagged length axis),
+    which are sliding-window (ring buffers never need more than
+    ``window`` slots), and which are recurrent state (RGLRU/RWKV: no
+    length axis, returned untouched) — no shape guessing."""
+    def grow_block(kind, c):
+        if kind not in (ATTN, ATTN_LOCAL):
+            return c
+        leaf = c["k"]
+        cur = leaf.shape[leaf.ndim + L.ATTN_CACHE_LEN_AXIS]
+        target = cur + extra_tokens
+        if kind == ATTN_LOCAL:
+            target = min(target, cfg.window)
+        return L.grow_attn_cache(c, target)
+
+    fkd, nper, tail = _layer_plan(cfg)
+    out = {"head_blocks": [grow_block(cfg.pattern[0], c)
+                           for c in cache["head_blocks"]]}
+    if nper:
+        out["periods"] = {f"b{j}": grow_block(kind,
+                                              cache["periods"][f"b{j}"])
+                          for j, kind in enumerate(cfg.pattern)}
+    out["tail"] = [grow_block(kind, c)
+                   for kind, c in zip(tail, cache["tail"])]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Blocks
 # ---------------------------------------------------------------------------

@@ -86,18 +86,7 @@ def test_decode_matches_full_forward(arch):
     h, cache, _ = model.hidden(params, {"tokens": toks[:, :S], **extra},
                                mode="prefill")
 
-    def grow(leaf):
-        length = S if not (cfg.frontend_embeds
-                           and not cfg.is_encoder_decoder) \
-            else S + cfg.frontend_embeds
-        for d in range(leaf.ndim):
-            if leaf.shape[d] == length and leaf.ndim >= 3:
-                pad = [(0, 0)] * leaf.ndim
-                pad[d] = (0, 8)
-                return jnp.pad(leaf, pad)
-        return leaf
-
-    cache = jax.tree.map(grow, cache)
+    cache = model.grow_cache(cache, 8)
     pos = S + (cfg.frontend_embeds
                if cfg.frontend_embeds and not cfg.is_encoder_decoder else 0)
     lg, _ = model.logits(params, {"tokens": toks[:, S:S + 1]},

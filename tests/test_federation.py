@@ -1,0 +1,144 @@
+"""Federation API: seed-for-seed legacy equivalence, engine agreement,
+strategies, protocol messages."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedKTConfig
+from repro.core.fedkt import run_fedkt, run_pate_central, run_solo
+from repro.core.learners import NNLearner
+from repro.core.partition import homogeneous_partition
+from repro.data.synthetic import tabular_binary
+from repro.federation import (CentralPATEStrategy, FedKTSession,
+                              LoopEngine, SoloStrategy, VmapEngine,
+                              get_engine, label_wire_bytes, pytree_bytes,
+                              query_budget)
+from repro.federation.party import Party
+from repro.models.smallnets import MLP
+
+
+@pytest.fixture(scope="module")
+def data():
+    # n=2048 -> 1536 train examples: halves/quarters stay pow2-aligned
+    # so loop and vmap engines share identical padding buckets
+    return tabular_binary(n=2048, seed=0)
+
+
+@pytest.fixture(scope="module")
+def learner():
+    return NNLearner(MLP(14, 2, hidden=16), num_classes=2, steps=60)
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_session_loop_matches_legacy_run_fedkt(data, learner):
+    """The acceptance contract: engine="loop" reproduces the deprecated
+    entry point's accuracy AND epsilon at a fixed seed."""
+    cfg = FedKTConfig(num_parties=3, num_partitions=1, num_subsets=2,
+                      num_classes=2, privacy_level="L2", gamma=0.1,
+                      query_fraction=0.5, seed=7)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_fedkt(learner, data, cfg)
+    res = FedKTSession(learner, data, cfg, engine="loop").run()
+    assert res.accuracy == legacy.accuracy
+    assert res.epsilon == legacy.epsilon
+    _tree_equal(res.student_states, legacy.student_states)
+    assert res.meta["party_sizes"] == legacy.meta["party_sizes"]
+
+
+def test_loop_and_vmap_engines_agree(data, learner):
+    """Same protocol, same PRNG schedule, same votes: with pow2-aligned
+    party shards the two engines match down to the student weights."""
+    cfg = FedKTConfig(num_parties=2, num_partitions=2, num_subsets=2,
+                      num_classes=2, seed=3)
+    parts = homogeneous_partition(len(data["y_train"]), 2, seed=3)
+    r_loop = FedKTSession(learner, data, cfg, engine="loop",
+                          party_indices=parts).run()
+    r_vmap = FedKTSession(learner, data, cfg, engine="vmap",
+                          party_indices=parts).run()
+    assert r_loop.accuracy == r_vmap.accuracy
+    _tree_equal(r_loop.student_states, r_vmap.student_states)
+
+
+def test_party_engines_produce_identical_updates(data, learner):
+    cfg = FedKTConfig(num_parties=1, num_partitions=2, num_subsets=2,
+                      num_classes=2, seed=11)
+    idx = np.arange(512)
+    party = Party(party_id=0, X=data["X_train"], y=data["y_train"],
+                  indices=idx, cfg=cfg, learner=learner,
+                  student_learner=learner)
+    key = jax.random.PRNGKey(0)
+    upd_l, key_l = party.local_round(key, data["X_public"], 128,
+                                     LoopEngine())
+    upd_v, key_v = party.local_round(key, data["X_public"], 128,
+                                     VmapEngine())
+    np.testing.assert_array_equal(np.asarray(key_l), np.asarray(key_v))
+    np.testing.assert_array_equal(upd_l.vote_gaps, upd_v.vote_gaps)
+    _tree_equal(upd_l.student_states, upd_v.student_states)
+    assert upd_l.wire_bytes() == upd_v.wire_bytes() > 0
+
+
+def test_fit_stacked_matches_serial_fit(learner):
+    rng = np.random.default_rng(0)
+    Xs = [rng.normal(0, 1, (40, 14)).astype(np.float32) for _ in range(3)]
+    ys = [rng.integers(0, 2, 40).astype(np.int32) for _ in range(3)]
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    stacked = learner.fit_stacked(keys, Xs, ys)
+    for i in range(3):
+        serial = learner.fit(keys[i], Xs[i], ys[i])
+        _tree_equal(serial, jax.tree.map(lambda l: l[i], stacked))
+    # stacked predict rows == serial predict
+    Xq = rng.normal(0, 1, (17, 14)).astype(np.float32)
+    preds = np.asarray(learner.predict_stacked(stacked, Xq))
+    for i in range(3):
+        row = np.asarray(learner.predict(
+            jax.tree.map(lambda l: l[i], stacked), Xq))
+        np.testing.assert_array_equal(preds[i], row)
+
+
+def test_legacy_wrappers_warn_and_run(data, learner):
+    cfg = FedKTConfig(num_parties=2, num_partitions=1, num_subsets=2,
+                      num_classes=2, seed=1)
+    with pytest.warns(DeprecationWarning):
+        solo = run_solo(learner, data, cfg)
+    assert 0.0 <= solo <= 1.0
+    assert solo == SoloStrategy(learner).run(data, cfg).accuracy
+    with pytest.warns(DeprecationWarning):
+        pate = run_pate_central(learner, data, cfg, num_teachers=2)
+    assert pate == CentralPATEStrategy(learner, 2).run(data, cfg).accuracy
+
+
+def test_query_budget_levels():
+    n = 100
+    l0 = FedKTConfig(privacy_level="L0", query_fraction=0.2)
+    assert query_budget(l0, n) == (n, n)
+    l1 = FedKTConfig(privacy_level="L1", query_fraction=0.2)
+    assert query_budget(l1, n) == (n, 20)
+    l2 = FedKTConfig(privacy_level="L2", query_fraction=0.2)
+    assert query_budget(l2, n) == (20, n)
+    tiny = FedKTConfig(privacy_level="L1", query_fraction=0.001)
+    assert query_budget(tiny, n) == (n, 1)      # never zero queries
+
+
+def test_engine_registry():
+    assert get_engine("loop").name == "loop"
+    assert get_engine("vmap").name == "vmap"
+    eng = LoopEngine()
+    assert get_engine(eng) is eng
+    with pytest.raises(ValueError):
+        get_engine("warp")
+
+
+def test_message_wire_sizes():
+    tree = {"w": np.zeros((4, 8), np.float32), "b": np.zeros(8, np.int32)}
+    assert pytree_bytes(tree) == 4 * 8 * 4 + 8 * 4
+    assert pytree_bytes(jax.eval_shape(lambda: tree)) == pytree_bytes(tree)
+    assert label_wire_bytes(750) == 3000

@@ -156,7 +156,7 @@ def test_vote_top2_gap_clean():
     np.testing.assert_allclose(np.asarray(top2), srt[:, -2])
 
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 
 @given(st.integers(1, 24), st.integers(1, 40), st.integers(2, 100),

@@ -1,6 +1,6 @@
 """Partitioning invariants (hypothesis property tests)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.partition import (dirichlet_partition, homogeneous_partition,
                                   subsets_of_partition)

@@ -1,7 +1,7 @@
 """Privacy accountant: theorem bounds, monotonicity, composition."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import privacy as P
 

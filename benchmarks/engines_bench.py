@@ -1,11 +1,19 @@
 """Federation engine benchmark: serial "loop" vs batched "vmap" teacher
-execution on the quickstart config (5 parties x 2 partitions x 4
-teachers, tabular MLP).
+AND student execution on the quickstart config (5 parties x 2
+partitions x 4 teachers).
 
-The vmap engine trains each party's whole s*t teacher grid as one
-batched jit dispatch instead of s*t sequential ones; both engines run
-the identical protocol and PRNG schedule.  Writes the headline numbers
-to BENCH_federation_engines.json at the repo root.
+Two learner rows, covering both sides of the paper's model-agnosticism
+claim:
+
+  nn : tabular MLP teachers (differentiable — the original 1.86x row)
+  rf : random-forest teachers (non-differentiable; the models FedAvg
+       cannot federate).  The vmap engine trains each party's whole s*t
+       teacher grid as one stacked histogram fit, and its s students as
+       one stacked fit — with zero-weight padding the results are
+       bit-identical to the serial loop.
+
+Both engines run the identical protocol and PRNG schedule.  Writes the
+headline numbers to BENCH_federation_engines.json at the repo root.
 
     PYTHONPATH=src python -m benchmarks.engines_bench
 """
@@ -16,7 +24,7 @@ import os
 import time
 
 from repro.configs.base import FedKTConfig
-from repro.core.learners import NNLearner
+from repro.core.learners import NNLearner, RFLearner
 from repro.data.synthetic import tabular_binary
 from repro.federation import FedKTSession
 from repro.models.smallnets import MLP
@@ -25,24 +33,36 @@ OUT = os.path.join(os.path.dirname(__file__), "..",
                    "BENCH_federation_engines.json")
 REPEATS = 3
 
+QUICKSTART = dict(num_parties=5, num_partitions=2, num_subsets=4,
+                  num_classes=2, beta=0.5)
 
-def quickstart_setup():
+
+def nn_setup():
     data = tabular_binary(n=6000, seed=0)
     learner = NNLearner(MLP(num_features=14, num_classes=2, hidden=32),
                         num_classes=2, steps=200)
-    cfg = FedKTConfig(num_parties=5, num_partitions=2, num_subsets=4,
-                      num_classes=2, beta=0.5)
-    return learner, data, cfg
+    return learner, data, FedKTConfig(**QUICKSTART), \
+        "NNLearner(MLP-32, steps=200)"
 
 
-def bench(repeats=REPEATS, write=True):
-    learner, data, cfg = quickstart_setup()
-    rec = {"config": {"num_parties": cfg.num_parties,
+def rf_setup():
+    data = tabular_binary(n=6000, seed=0)
+    learner = RFLearner(num_classes=2, num_trees=16, depth=5)
+    return learner, data, FedKTConfig(**QUICKSTART), \
+        "RFLearner(trees=16, depth=5)"
+
+
+SETUPS = {"nn": nn_setup, "rf": rf_setup}
+
+
+def bench_one(setup, repeats):
+    learner, data, cfg, desc = setup()
+    row = {"config": {"num_parties": cfg.num_parties,
                       "num_partitions": cfg.num_partitions,
                       "num_subsets": cfg.num_subsets,
-                      "learner": "NNLearner(MLP-32, steps=200)",
+                      "learner": desc,
                       "n_train": len(data["X_train"])},
-           "repeats": repeats, "engines": {}}
+           "engines": {}}
     results = {}
     for engine in ("loop", "vmap"):
         session = FedKTSession(learner, data, cfg, engine=engine)
@@ -55,17 +75,24 @@ def bench(repeats=REPEATS, write=True):
             res = FedKTSession(learner, data, cfg, engine=engine).run()
             warms.append(time.time() - t0)
         results[engine] = res
-        rec["engines"][engine] = {
+        row["engines"][engine] = {
             "cold_s": round(cold, 3),
             "warm_s": round(sorted(warms)[len(warms) // 2], 3),
             "warm_runs_s": [round(w, 3) for w in warms],
             "accuracy": round(res.accuracy, 4),
         }
-    e = rec["engines"]
-    rec["warm_speedup_vmap_over_loop"] = round(
+    e = row["engines"]
+    row["warm_speedup_vmap_over_loop"] = round(
         e["loop"]["warm_s"] / e["vmap"]["warm_s"], 2)
-    rec["accuracies_agree"] = bool(
+    row["accuracies_agree"] = bool(
         results["loop"].accuracy == results["vmap"].accuracy)
+    return row
+
+
+def bench(repeats=REPEATS, write=True, names=None):
+    rec = {"repeats": repeats, "benches": {}}
+    for name in (names or SETUPS):
+        rec["benches"][name] = bench_one(SETUPS[name], repeats)
     if write:
         with open(OUT, "w") as f:
             json.dump(rec, f, indent=1)
@@ -77,11 +104,12 @@ def run(em, quick=True):
     """benchmarks.run entry: one warm repeat in quick mode, and never
     overwrite the committed BENCH record with quick-mode numbers."""
     rec = bench(repeats=1 if quick else REPEATS, write=not quick)
-    for engine, r in rec["engines"].items():
-        em.emit("engines", engine, "warm_s", r["warm_s"])
-        em.emit("engines", engine, "acc", r["accuracy"])
-    em.emit("engines", "vmap/loop", "warm_speedup",
-            rec["warm_speedup_vmap_over_loop"])
+    for name, row in rec["benches"].items():
+        for engine, r in row["engines"].items():
+            em.emit("engines", f"{name}/{engine}", "warm_s", r["warm_s"])
+            em.emit("engines", f"{name}/{engine}", "acc", r["accuracy"])
+        em.emit("engines", f"{name}/vmap_over_loop", "warm_speedup",
+                row["warm_speedup_vmap_over_loop"])
 
 
 if __name__ == "__main__":

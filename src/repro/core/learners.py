@@ -119,18 +119,52 @@ class RFLearner:
     num_trees: int = 20
     depth: int = 6
 
+    def _rf(self):
+        return T.RandomForest(self.num_trees, self.depth, self.num_classes)
+
     def fit(self, key, X, y):
         X = np.asarray(X, np.float32)
         edges = jnp.asarray(T.make_bins(X))
-        rf = T.RandomForest(self.num_trees, self.depth, self.num_classes)
-        forest = rf.fit(key, jnp.asarray(X), jnp.asarray(y, jnp.int32),
-                        edges)
+        forest = self._rf().fit(key, jnp.asarray(X),
+                                jnp.asarray(y, jnp.int32), edges)
+        return (forest, edges)
+
+    def fit_stacked(self, keys, Xs, ys):
+        """k forests as one stacked jit fit (federation vmap engine).
+
+        Each dataset keeps its own quantile edges and a bootstrap draw
+        at its TRUE size (key-for-key identical to serial ``fit``); rows
+        padding up to the shared pow2 bucket carry ZERO sample weight,
+        so the stacked states are bit-identical to the serial loop
+        regardless of bucket size (histograms ignore w == 0 rows)."""
+        rf = self._rf()
+        bucket = max(_pow2_bucket(len(X)) for X in Xs)
+        edges, Xp, yp, wp, fm = [], [], [], [], []
+        for kk, X, y in zip(keys, Xs, ys):
+            X = np.asarray(X, np.float32)
+            edges.append(T.make_bins(X))
+            w_i, fm_i = rf.bootstrap(kk, len(X), X.shape[1])
+            w_pad = np.zeros((self.num_trees, bucket), np.float32)
+            w_pad[:, :len(X)] = np.asarray(w_i)
+            Xi, yi, _ = _pad_pow2(X, np.asarray(y), bucket=bucket)
+            Xp.append(Xi), yp.append(yi), wp.append(w_pad), fm.append(fm_i)
+        edges = jnp.asarray(np.stack(edges))
+        forest = T.fit_forest_stacked(
+            jnp.stack(Xp), edges, jnp.stack(yp),
+            jnp.asarray(np.stack(wp)), jnp.stack(fm),
+            depth=self.depth, num_classes=self.num_classes)
         return (forest, edges)
 
     def predict(self, state, X):
         forest, edges = state
-        rf = T.RandomForest(self.num_trees, self.depth, self.num_classes)
-        return rf.predict(forest, jnp.asarray(X, jnp.float32), edges)
+        return self._rf().predict(forest, jnp.asarray(X, jnp.float32),
+                                  edges)
+
+    def predict_stacked(self, states, X):
+        """(k, T) predictions of k stacked forests on one shared X."""
+        forest, edges = states
+        return T.predict_forest_stacked(forest,
+                                        jnp.asarray(X, jnp.float32), edges)
 
 
 @dataclass(frozen=True)
@@ -139,17 +173,43 @@ class GBDTLearner:
     num_rounds: int = 30
     depth: int = 6
 
+    def _gb(self):
+        return T.GBDT(self.num_rounds, self.depth)
+
     def fit(self, key, X, y):
         X = np.asarray(X, np.float32)
         edges = jnp.asarray(T.make_bins(X))
-        gb = T.GBDT(self.num_rounds, self.depth)
+        gb = self._gb()
         return (gb.fit(key, jnp.asarray(X), jnp.asarray(y, jnp.int32),
                        edges), edges)
 
+    def fit_stacked(self, keys, Xs, ys):
+        """k GBDTs as one stacked jit fit.  Shared pow2 bucket; padding
+        rows carry zero g/h weight, so stacked == serial bit-for-bit
+        (see trees.fit_gbdt)."""
+        gb = self._gb()
+        bucket = max(_pow2_bucket(len(X)) for X in Xs)
+        edges, Xp, yp, wp = [], [], [], []
+        for X, y in zip(Xs, ys):
+            X = np.asarray(X, np.float32)
+            edges.append(T.make_bins(X))
+            Xi, yi, mi = _pad_pow2(X, np.asarray(y), bucket=bucket)
+            Xp.append(Xi), yp.append(yi), wp.append(mi)
+        edges = jnp.asarray(np.stack(edges))
+        trees = T.fit_gbdt_stacked(
+            jnp.stack(Xp), edges, jnp.stack(yp), jnp.stack(wp),
+            gb.learning_rate, num_rounds=self.num_rounds, depth=self.depth)
+        return (trees, edges)
+
     def predict(self, state, X):
         trees, edges = state
-        gb = T.GBDT(self.num_rounds, self.depth)
-        return gb.predict(trees, jnp.asarray(X, np.float32), edges)
+        return self._gb().predict(trees, jnp.asarray(X, np.float32), edges)
+
+    def predict_stacked(self, states, X):
+        """(k, T) predictions of k stacked GBDTs on one shared X."""
+        trees, edges = states
+        return T.predict_gbdt_stacked(trees, jnp.asarray(X, np.float32),
+                                      edges, self._gb().learning_rate)
 
 
 def accuracy(learner, state, X, y) -> float:

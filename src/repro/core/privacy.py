@@ -76,11 +76,18 @@ def fedkt_l1_epsilon(gaps_or_counts, gamma: float, s: int,
     """Party-level eps of FedKT-L1 over the answered queries (Thm 1+2).
 
     The server mechanism is (2*s*gamma, 0) party-level DP per query.
+
+    Lemma 7's q bound is evaluated on the RAW consistent-vote histogram
+    with the raw noise scale: the server adds Lap(1/gamma) to counts
+    that move in multiples of s, and q = Pr[noisy argmax != o*] only
+    ever sees the products gamma * gap, which are invariant under
+    rescaling counts and noise to "party units" (gap/s with Lap(1/(s*
+    gamma))).  Party-level sensitivity enters ONLY through eps0 =
+    2*s*gamma in the moment bound below — dividing the gaps by s as
+    well would double-count s and loosen the bound.
     """
     if exact:
         q = lemma7_q_exact(gaps_or_counts, gamma)
-        # consistent voting changes counts by s per party: gap in "party
-        # units" is gap/s when applying the party-level lemma
     else:
         q = lemma7_q(gaps_or_counts, gamma, num_classes)
     alpha = per_query_moments(q, 2.0 * s * gamma).sum(axis=0)

@@ -113,6 +113,49 @@ def tree_apply(tree, xb):
 # ---------------------------------------------------------------------------
 # Random forest
 # ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("depth", "num_classes",
+                                             "num_bins"))
+def fit_forest(xb, y, w, fm, *, depth, num_classes, num_bins=NUM_BINS):
+    """One forest: vmap of fit_tree_gini over the tree axis.
+    w: (T, N) per-tree sample weights; fm: (T, F) feature masks."""
+    fit_one = functools.partial(fit_tree_gini, depth=depth,
+                                num_classes=num_classes, num_bins=num_bins)
+    return jax.vmap(lambda wi, fi: fit_one(xb, y, wi, fi))(w, fm)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "num_classes",
+                                             "num_bins"))
+def fit_forest_stacked(X, edges, y, w, fm, *, depth, num_classes,
+                       num_bins=NUM_BINS):
+    """k forests as one batched fit.  X: (k, M, F) f32 rows padded to a
+    shared bucket M; edges: (k, F, num_bins-1); y: (k, M); w: (k, T, M);
+    fm: (k, T, F).  Padding rows ride at w == 0: every histogram and
+    leaf scatter-add sees only exact zeros for them, so each stacked
+    tree is bit-identical to its serial fit regardless of bucket size."""
+
+    def fit_one_forest(Xi, ei, yi, wi, fi):
+        return fit_forest(binize(Xi, ei), yi, wi, fi, depth=depth,
+                          num_classes=num_classes, num_bins=num_bins)
+
+    return jax.vmap(fit_one_forest)(X, edges, y, w, fm)
+
+
+def _forest_probs(forest, xb):
+    probs = jax.vmap(lambda t: tree_apply(t, xb))(forest)      # (T,N,C)
+    return probs.mean(0)
+
+
+@jax.jit
+def predict_forest_stacked(forests, X, edges):
+    """(k,) stacked forests on one shared X -> (k, N) int32 labels."""
+
+    def one(forest, e):
+        return jnp.argmax(_forest_probs(forest, binize(X, e)),
+                          axis=-1).astype(jnp.int32)
+
+    return jax.vmap(one)(forests, edges)
+
+
 @dataclass(frozen=True)
 class RandomForest:
     num_trees: int = 20
@@ -120,9 +163,11 @@ class RandomForest:
     num_classes: int = 2
     feature_frac: float = 0.7
 
-    def fit(self, key, X, y, edges):
-        xb = binize(X, edges)
-        N, F = xb.shape
+    def bootstrap(self, key, N, F):
+        """Per-tree bootstrap weights (T, N) and feature masks (T, F).
+        Drawn at the TRUE dataset size N — the stacked fit calls this
+        per dataset before padding, so a teacher's draw never depends on
+        the shared bucket and key usage matches ``fit`` split-for-split."""
         kb, kf = jax.random.split(key)
         # bootstrap via draw-with-replacement counts as sample weights
         # (multinomial(N, uniform) == histogram of N uniform draws)
@@ -132,15 +177,19 @@ class RandomForest:
         fm = (jax.random.uniform(kf, (self.num_trees, F))
               < self.feature_frac).astype(jnp.float32)
         fm = jnp.maximum(fm, jnp.zeros_like(fm).at[:, 0].set(1.0))
+        return w, fm
 
-        fit_one = functools.partial(fit_tree_gini, depth=self.depth,
-                                    num_classes=self.num_classes)
-        return jax.vmap(lambda wi, fi: fit_one(xb, y, wi, fi))(w, fm)
+    def fit(self, key, X, y, edges):
+        xb = binize(X, edges)
+        N, F = xb.shape
+        w, fm = self.bootstrap(key, N, F)
+        return fit_forest(xb, y, w, fm, depth=self.depth,
+                          num_classes=self.num_classes)
 
     def predict(self, forest, X, edges):
         xb = binize(X, edges)
-        probs = jax.vmap(lambda t: tree_apply(t, xb))(forest)  # (T,N,C)
-        return jnp.argmax(probs.mean(0), axis=-1).astype(jnp.int32)
+        return jnp.argmax(_forest_probs(forest, xb),
+                          axis=-1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +238,60 @@ def fit_tree_gh(xb, g, h, *, depth, num_bins=NUM_BINS, lam=1.0):
     return split_feat, split_bin, leaf
 
 
+@functools.partial(jax.jit, static_argnames=("num_rounds", "depth",
+                                             "num_bins"))
+def fit_gbdt(xb, y, w, lr, *, num_rounds, depth, num_bins=NUM_BINS):
+    """Full boosting loop as ONE jitted lax.scan over rounds (the former
+    Python loop re-dispatched an un-jitted ``tree_apply`` every round).
+
+    w: (N,) f32 masks the gradients/hessians — rows padded into a shared
+    bucket ride at w == 0 and contribute exact zeros to every G/H
+    histogram and leaf sum, so padding never changes a split or leaf."""
+    yf = y.astype(jnp.float32)
+
+    def boost_round(logits, _):
+        p = jax.nn.sigmoid(logits)
+        tree = fit_tree_gh(xb, (p - yf) * w, (p * (1.0 - p)) * w,
+                           depth=depth, num_bins=num_bins)
+        logits = logits + lr * tree_apply(tree, xb)[:, 0]
+        return logits, tree
+
+    _, trees = jax.lax.scan(boost_round,
+                            jnp.zeros((xb.shape[0],), jnp.float32),
+                            None, length=num_rounds)
+    return trees                       # leaves stacked over rounds (R, ...)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rounds", "depth",
+                                             "num_bins"))
+def fit_gbdt_stacked(X, edges, y, w, lr, *, num_rounds, depth,
+                     num_bins=NUM_BINS):
+    """k GBDTs as one batched fit.  X: (k, M, F) rows padded to a shared
+    bucket; edges: (k, F, num_bins-1); y: (k, M); w: (k, M) zero on
+    padding rows (see fit_gbdt)."""
+
+    def one(Xi, ei, yi, wi):
+        return fit_gbdt(binize(Xi, ei), yi, wi, lr, num_rounds=num_rounds,
+                        depth=depth, num_bins=num_bins)
+
+    return jax.vmap(one)(X, edges, y, w)
+
+
+def _gbdt_logits(trees, xb, lr):
+    vals = jax.vmap(lambda t: tree_apply(t, xb)[:, 0])(trees)
+    return lr * vals.sum(0)
+
+
+@jax.jit
+def predict_gbdt_stacked(trees, X, edges, lr):
+    """(k,) stacked GBDTs on one shared X -> (k, N) int32 labels."""
+
+    def one(ti, ei):
+        return (_gbdt_logits(ti, binize(X, ei), lr) > 0).astype(jnp.int32)
+
+    return jax.vmap(one)(trees, edges)
+
+
 @dataclass(frozen=True)
 class GBDT:
     num_rounds: int = 30
@@ -196,20 +299,14 @@ class GBDT:
     learning_rate: float = 0.3
     num_classes: int = 2  # binary only
 
-    def fit(self, key, X, y, edges):
+    def fit(self, key, X, y, edges, w=None):
         xb = binize(X, edges)
-        yf = y.astype(jnp.float32)
-        logits = jnp.zeros((X.shape[0],), jnp.float32)
-        trees = []
-        for _ in range(self.num_rounds):
-            p = jax.nn.sigmoid(logits)
-            tree = fit_tree_gh(xb, p - yf, p * (1 - p), depth=self.depth)
-            logits = logits + self.learning_rate * tree_apply(tree, xb)[:, 0]
-            trees.append(tree)
-        return jax.tree.map(lambda *t: jnp.stack(t), *trees)
+        if w is None:
+            w = jnp.ones((xb.shape[0],), jnp.float32)
+        return fit_gbdt(xb, y, w, self.learning_rate,
+                        num_rounds=self.num_rounds, depth=self.depth)
 
     def predict(self, trees, X, edges):
         xb = binize(X, edges)
-        vals = jax.vmap(lambda t: tree_apply(t, xb)[:, 0])(trees)
-        logits = self.learning_rate * vals.sum(0)
-        return (logits > 0).astype(jnp.int32)
+        return (_gbdt_logits(trees, xb, self.learning_rate)
+                > 0).astype(jnp.int32)

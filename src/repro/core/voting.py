@@ -21,14 +21,21 @@ from repro.kernels import ops, ref
 
 class VoteResult(NamedTuple):
     labels: jnp.ndarray       # (T,) int32
-    counts: jnp.ndarray       # (T, U) int32 — CLEAN counts (for privacy)
+    counts: Optional[jnp.ndarray]  # (T, U) CLEAN counts (None on the TPU
+    #                           kernel path, which never materializes the
+    #                           histogram — it emits the gap directly)
     top_gap: jnp.ndarray      # (T,) f32 — clean top1 - top2 (Lemma 7)
 
 
 def laplace(key, shape, scale):
     """Laplace(0, scale) via inverse CDF of uniform (on-device, counter-
-    based PRNG — DESIGN.md §3)."""
-    u = jax.random.uniform(key, shape, minval=-0.5 + 1e-7, maxval=0.5)
+    based PRNG — DESIGN.md §3).  The uniform is clipped to the SYMMETRIC
+    interval [-0.5 + 1e-7, 0.5 - 1e-7] before the transform: clipping
+    only the negative side (the old minval=-0.5+1e-7, maxval=0.5 draw)
+    truncated the negative tail one ulp-band short of the positive one,
+    biasing the DP noise toward positive values."""
+    u = jax.random.uniform(key, shape, minval=-0.5, maxval=0.5)
+    u = jnp.clip(u, -0.5 + 1e-7, 0.5 - 1e-7)
     return -scale * jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
 
 
@@ -37,16 +44,18 @@ def teacher_vote(preds, num_classes, *, gamma=0.0, key=None,
     """Party-side ensemble vote.  preds: (t, T) int32 teacher predictions.
 
     gamma > 0 adds Lap(1/gamma) to the histogram (FedKT-L2, lines 9-10).
+    The noised labels and the clean Lemma-7 gap both come out of ONE
+    histogram build (ops.votes_with_clean) — this runs once per
+    partition per party, on the hot path of every round.
     """
     t, T = preds.shape
     noise = None
     if gamma > 0.0:
         assert key is not None
         noise = laplace(key, (T, num_classes), 1.0 / gamma)
-    labels, _, _ = ops.votes(preds, num_classes, noise, impl=impl)
-    _, counts = ref.vote_aggregate_ref(preds, num_classes)
-    top2 = jax.lax.top_k(counts.astype(jnp.float32), 2)[0]
-    return VoteResult(labels, counts, top2[:, 0] - top2[:, 1])
+    labels, counts, c1, c2 = ops.votes_with_clean(preds, num_classes,
+                                                  noise, impl=impl)
+    return VoteResult(labels, counts, c1 - c2)
 
 
 def consistent_vote(student_preds, num_classes, *, consistent=True,

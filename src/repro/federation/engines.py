@@ -23,14 +23,14 @@ labels (test-enforced).
 """
 from __future__ import annotations
 
-from typing import Any, Protocol, Sequence, Tuple
+from typing import Any, List, Protocol, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 class Engine(Protocol):
-    """Pluggable teacher-execution backend."""
+    """Pluggable teacher/student-execution backend."""
     name: str
 
     def fit_teachers(self, keys: Sequence[Any], learner,
@@ -47,6 +47,28 @@ class Engine(Protocol):
         """Predictions of every teacher in the bank: (t, T) int32."""
         ...
 
+    def fit_students(self, keys: Sequence[Any], learner, X,
+                     labelsets: Sequence[Any]) -> List[Any]:
+        """Trains one student per voted labelset, all on the SAME query
+        set X.  Returns a plain list of student states — the PartyUpdate
+        wire format — so batching is an execution detail, not a protocol
+        change."""
+        ...
+
+    def predict_students(self, learner, states: Sequence[Any],
+                         X) -> jnp.ndarray:
+        """Predictions of a list of (unstacked) student states on one
+        shared X: (len(states), T) int32."""
+        ...
+
+
+def _serial_fit_students(keys, learner, X, labelsets):
+    return [learner.fit(kk, X, y) for kk, y in zip(keys, labelsets)]
+
+
+def _serial_predict(learner, states, X):
+    return jnp.stack([learner.predict(st, X) for st in states])
+
 
 class LoopEngine:
     """Serial reference engine (seed semantics of the legacy loop)."""
@@ -60,16 +82,26 @@ class LoopEngine:
         return bank[start:stop]
 
     def predict_teachers(self, learner, bank, X):
-        return jnp.stack([learner.predict(st, X) for st in bank])
+        return _serial_predict(learner, bank, X)
+
+    def fit_students(self, keys, learner, X, labelsets):
+        return _serial_fit_students(keys, learner, X, labelsets)
+
+    def predict_students(self, learner, states, X):
+        return _serial_predict(learner, states, X)
 
 
 class VmapEngine:
     """Batched engine: one vmap'd fit over the stacked teacher grid.
 
     Learners opt in by providing ``fit_stacked(keys, Xs, ys)`` /
-    ``predict_stacked(states, X)`` (see NNLearner); learners without the
-    hooks (e.g. the histogram tree learners) fall back to the serial
-    path with identical keys, so mixing learner kinds stays correct.
+    ``predict_stacked(states, X)`` (NNLearner, RFLearner, GBDTLearner);
+    learners without the hooks fall back to the serial path with
+    identical keys, so mixing learner kinds stays correct.
+
+    Students batch too: a party's s students all train on the same query
+    set, so their fits share one bucket and stacking is always
+    bit-identical to the serial loop (engine-agreement test-enforced).
     """
     name = "vmap"
 
@@ -88,7 +120,22 @@ class VmapEngine:
 
     def predict_teachers(self, learner, bank, X):
         if isinstance(bank, list):                 # serial fallback
-            return jnp.stack([learner.predict(st, X) for st in bank])
+            return _serial_predict(learner, bank, X)
+        return learner.predict_stacked(bank, X)
+
+    def fit_students(self, keys, learner, X, labelsets):
+        if not hasattr(learner, "fit_stacked") or len(labelsets) < 2:
+            return _serial_fit_students(keys, learner, X, labelsets)
+        stacked = learner.fit_stacked(jnp.stack(list(keys)),
+                                      [X] * len(labelsets),
+                                      list(labelsets))
+        return [jax.tree.map(lambda leaf: leaf[i], stacked)
+                for i in range(len(labelsets))]
+
+    def predict_students(self, learner, states, X):
+        if not hasattr(learner, "predict_stacked") or len(states) < 2:
+            return _serial_predict(learner, states, X)
+        bank = jax.tree.map(lambda *leaves: jnp.stack(leaves), *states)
         return learner.predict_stacked(bank, X)
 
 

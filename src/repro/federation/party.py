@@ -74,15 +74,19 @@ class Party:
                     for j in range(s) for sub in plan[j]]
         bank = engine.fit_teachers(teacher_keys, self.learner, datasets)
 
-        students: List[Any] = []
+        labelsets: List[np.ndarray] = []
         gaps: List[np.ndarray] = []
         for j in range(s):
             bank_j = engine.slice_bank(bank, j * t, (j + 1) * t)
             preds = engine.predict_teachers(self.learner, bank_j, Xq)
             vote = teacher_vote(preds, u, gamma=gamma, key=vote_keys[j])
             gaps.append(np.asarray(vote.top_gap))
-            students.append(self.student_learner.fit(
-                student_keys[j], Xq, np.asarray(vote.labels)))
+            labelsets.append(np.asarray(vote.labels))
+        # all s students vote on the same Xq, so the engine may train
+        # them as ONE stacked fit; student_keys is the precomputed legacy
+        # schedule, so batching never changes a student's seed
+        students: List[Any] = engine.fit_students(
+            student_keys, self.student_learner, Xq, labelsets)
 
         update = PartyUpdate(party_id=self.party_id,
                              student_states=students,

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.base import FedKTConfig
 from repro.core import privacy as P
 from repro.core.voting import VoteResult, consistent_vote
+from repro.federation.engines import Engine, LoopEngine
 from repro.federation.messages import PartyUpdate
 
 
@@ -28,16 +29,19 @@ class Server:
         self.final_learner = final_learner
 
     def aggregate(self, key, updates: Sequence[PartyUpdate], X_public,
-                  num_queries: int):
+                  num_queries: int, engine: Engine = None):
         """Consistent vote over all student models + final distillation.
 
-        Returns (final_state, VoteResult, advanced key).
+        ``engine`` decides how the n*s student models answer the query
+        set (serial loop vs one stacked predict); defaults to the serial
+        reference engine.  Returns (final_state, VoteResult, key).
         """
         cfg = self.cfg
+        engine = engine or LoopEngine()
         Xq = X_public[:num_queries]
         student_preds = jnp.stack([
-            jnp.stack([self.student_learner.predict(st, Xq)
-                       for st in upd.student_states])
+            engine.predict_students(self.student_learner,
+                                    upd.student_states, Xq)
             for upd in updates])                      # (n, s, Tq)
         key, kk = jax.random.split(key)
         gamma = cfg.gamma if cfg.privacy_level == "L1" else 0.0

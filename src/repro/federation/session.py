@@ -88,7 +88,7 @@ class FedKTSession:
 
         t0 = time.time()
         final_state, vote, key = self.server.aggregate(
-            key, updates, Xpub, self.tq_server)
+            key, updates, Xpub, self.tq_server, engine=self.engine)
         t_server = time.time() - t0
 
         acc = accuracy(self.final_learner, final_state,

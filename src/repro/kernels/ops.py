@@ -232,13 +232,32 @@ def _wkv_xla_chunked(r, k, v, w, u, s0, chunk=128):
 # ---------------------------------------------------------------------------
 # Vote aggregation
 # ---------------------------------------------------------------------------
+def _top2_of(scores, argmax_labels, num_classes):
+    """(top1, top2) with only the argmax POSITION masked, so exact ties
+    give top2 == top1 (top_k semantics)."""
+    top1 = jnp.max(scores, axis=-1)
+    masked = jnp.where(
+        jax.nn.one_hot(argmax_labels, num_classes, dtype=bool),
+        NEG_INF, scores)
+    return top1, jnp.max(masked, axis=-1)
+
+
+def _votes_kernel(preds, num_classes, noise, interpret):
+    T = preds.shape[1]
+    if noise is None:
+        noise = jnp.zeros((T, num_classes), jnp.float32)
+    bt = 128 if T % 128 == 0 else T
+    bu = 512 if num_classes % 512 == 0 else num_classes
+    return _va.vote_aggregate(preds, noise, num_classes=num_classes,
+                              block_t=bt, block_u=bu, interpret=interpret)
+
+
 def votes(preds, num_classes, noise=None, *, impl="auto"):
     """Max-vote labels + top-2 vote scores.
 
     preds: (M, T) int32; noise: optional (T, U) f32.
     Returns (labels (T,) i32, top1 (T,) f32, top2 (T,) f32)."""
     impl = resolve_impl(impl)
-    M, T = preds.shape
     if noise is None and num_classes > 2048:
         # LM-scale noise-free voting: O(M log M), no U-sized tensors
         return votes_sort(preds)
@@ -247,18 +266,38 @@ def votes(preds, num_classes, noise=None, *, impl="auto"):
         scores = counts.astype(jnp.float32)
         if noise is not None:
             scores = scores + noise
-        top1 = jnp.max(scores, axis=-1)
-        masked = jnp.where(
-            jax.nn.one_hot(labels, num_classes, dtype=bool), NEG_INF, scores)
-        top2 = jnp.max(masked, axis=-1)
+        top1, top2 = _top2_of(scores, labels, num_classes)
         return labels, top1, top2
-    interpret = impl == "kernel_interpret"
-    if noise is None:
-        noise = jnp.zeros((T, num_classes), jnp.float32)
-    bt = 128 if T % 128 == 0 else T
-    bu = 512 if num_classes % 512 == 0 else num_classes
-    return _va.vote_aggregate(preds, noise, num_classes=num_classes,
-                              block_t=bt, block_u=bu, interpret=interpret)
+    labels, top1, top2, _, _ = _votes_kernel(
+        preds, num_classes, noise, impl == "kernel_interpret")
+    return labels, top1, top2
+
+
+def votes_with_clean(preds, num_classes, noise=None, *, impl="auto"):
+    """Noisy max-vote labels + CLEAN top-2 from ONE histogram build.
+
+    The party-side vote hot path needs both the noised argmax (the label
+    it answers with) and the pre-noise gap (the Lemma-7 privacy input);
+    building the (T, U) histogram once serves both.  Returns
+    (labels, counts, clean_top1, clean_top2) where ``counts`` is the
+    clean histogram on the xla path and None on the kernel paths (the
+    blocked kernel never materializes it — it emits clean top-2
+    directly) and on the LM-scale sort path."""
+    impl = resolve_impl(impl)
+    if noise is None and num_classes > 2048:
+        labels, top1, top2 = votes_sort(preds)
+        return labels, None, top1, top2
+    if impl == "xla":
+        clean_labels, counts = ref.vote_aggregate_ref(preds, num_classes)
+        cf = counts.astype(jnp.float32)
+        c1, c2 = _top2_of(cf, clean_labels, num_classes)
+        if noise is None:
+            return clean_labels, counts, c1, c2
+        labels = jnp.argmax(cf + noise, axis=-1).astype(jnp.int32)
+        return labels, counts, c1, c2
+    labels, _, _, c1, c2 = _votes_kernel(
+        preds, num_classes, noise, impl == "kernel_interpret")
+    return labels, None, c1, c2
 
 
 def votes_sort(preds):

@@ -25,8 +25,33 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _block_top2(scores, bt, bu):
+    """(m1 (bt,1), argmax (bt,), m2 (bt,1)) of one class block.  Masks
+    only the argmax POSITION (not every equal value), so exact ties
+    yield m2 == m1 — matching the xla path's one_hot masking and the
+    top_k semantics the Lemma-7 gap needs on clean integer counts."""
+    m1 = jnp.max(scores, axis=1, keepdims=True)                  # (bt,1)
+    i1 = jnp.argmax(scores, axis=1).astype(jnp.int32)            # (bt,)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bt, bu), 1)
+    masked = jnp.where(pos == i1[:, None], NEG_INF, scores)
+    m2 = jnp.max(masked, axis=1, keepdims=True)
+    return m1, i1, m2
+
+
+def _fold_top2(best, second, m1, m2):
+    """Fold one block's (m1, m2) into running (best, second).  Returns
+    (take, new_best, new_second); strictly-greater keeps the
+    first-occurrence argmax."""
+    take = m1 > best
+    new_best = jnp.where(take, m1, best)
+    new_second = jnp.maximum(jnp.where(take, best, m1), second)
+    new_second = jnp.maximum(new_second, jnp.where(take, m2, NEG_INF))
+    return take, new_best, new_second
+
+
 def _kernel(preds_ref, noise_ref, label_ref, top1_ref, top2_ref,
-            best_ref, second_ref, argbest_ref, *, M, bt, bu, nu):
+            clean1_ref, clean2_ref, best_ref, second_ref, argbest_ref,
+            cbest_ref, csecond_ref, *, M, bt, bu, nu):
     iu = pl.program_id(1)
 
     @pl.when(iu == 0)
@@ -34,6 +59,8 @@ def _kernel(preds_ref, noise_ref, label_ref, top1_ref, top2_ref,
         best_ref[...] = jnp.full_like(best_ref, NEG_INF)
         second_ref[...] = jnp.full_like(second_ref, NEG_INF)
         argbest_ref[...] = jnp.zeros_like(argbest_ref)
+        cbest_ref[...] = jnp.full_like(cbest_ref, NEG_INF)
+        csecond_ref[...] = jnp.full_like(csecond_ref, NEG_INF)
 
     class_base = iu * bu
     ids = class_base + jax.lax.broadcasted_iota(jnp.int32, (bt, bu), 1)
@@ -44,20 +71,20 @@ def _kernel(preds_ref, noise_ref, label_ref, top1_ref, top2_ref,
 
     counts = jax.lax.fori_loop(
         0, M, count_one, jnp.zeros((bt, bu), jnp.float32))
+
+    # clean top-2 (pre-noise): the privacy accountant's gap input, from
+    # the SAME histogram the noisy argmax consumes
+    cm1, _, cm2 = _block_top2(counts, bt, bu)
+    _, cbest, csecond = _fold_top2(cbest_ref[...], csecond_ref[...],
+                                   cm1, cm2)
+    cbest_ref[...] = cbest
+    csecond_ref[...] = csecond
+
+    # noisy top-2 of this class block
     scores = counts + noise_ref[...].astype(jnp.float32)
-
-    # top-2 of this class block
-    m1 = jnp.max(scores, axis=1, keepdims=True)                  # (bt,1)
-    i1 = jnp.argmax(scores, axis=1).astype(jnp.int32)            # (bt,)
-    masked = jnp.where(scores == m1, NEG_INF, scores)
-    m2 = jnp.max(masked, axis=1, keepdims=True)
-
-    best, second = best_ref[...], second_ref[...]
-    m1_ = m1
-    take = m1_ > best          # strictly greater: first-occurrence argmax
-    new_best = jnp.where(take, m1_, best)
-    new_second = jnp.maximum(jnp.where(take, best, m1_), second)
-    new_second = jnp.maximum(new_second, jnp.where(take, m2, NEG_INF))
+    m1, i1, m2 = _block_top2(scores, bt, bu)
+    take, new_best, new_second = _fold_top2(best_ref[...], second_ref[...],
+                                            m1, m2)
     argbest_ref[...] = jnp.where(
         take[:, 0], class_base + i1, argbest_ref[...])
     best_ref[...] = new_best
@@ -68,6 +95,8 @@ def _kernel(preds_ref, noise_ref, label_ref, top1_ref, top2_ref,
         label_ref[...] = argbest_ref[...]
         top1_ref[...] = best_ref[...][:, 0]
         top2_ref[...] = second_ref[...][:, 0]
+        clean1_ref[...] = cbest_ref[...][:, 0]
+        clean2_ref[...] = csecond_ref[...][:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -76,7 +105,9 @@ def vote_aggregate(preds, noise, *, num_classes, block_t=128, block_u=512,
                    interpret=False):
     """preds: (M, T) int32; noise: (T, U) float32 (zeros for L0).
 
-    Returns (labels (T,) int32, top1 (T,) f32, top2 (T,) f32).
+    Returns (labels (T,) int32, top1 (T,) f32, top2 (T,) f32,
+    clean_top1 (T,) f32, clean_top2 (T,) f32) — the noisy argmax stats
+    plus the pre-noise top-2 from the same single histogram pass.
     """
     M, T = preds.shape
     U = num_classes
@@ -92,13 +123,12 @@ def vote_aggregate(preds, noise, *, num_classes, block_t=128, block_u=512,
             pl.BlockSpec((M, bt), lambda it, iu: (0, it)),
             pl.BlockSpec((bt, bu), lambda it, iu: (it, iu)),
         ],
-        out_specs=[
-            pl.BlockSpec((bt,), lambda it, iu: (it,)),
-            pl.BlockSpec((bt,), lambda it, iu: (it,)),
-            pl.BlockSpec((bt,), lambda it, iu: (it,)),
-        ],
+        out_specs=[pl.BlockSpec((bt,), lambda it, iu: (it,))
+                   for _ in range(5)],
         out_shape=[
             jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
             jax.ShapeDtypeStruct((T,), jnp.float32),
             jax.ShapeDtypeStruct((T,), jnp.float32),
         ],
@@ -106,6 +136,8 @@ def vote_aggregate(preds, noise, *, num_classes, block_t=128, block_u=512,
             pltpu.VMEM((bt, 1), jnp.float32),   # best
             pltpu.VMEM((bt, 1), jnp.float32),   # second
             pltpu.VMEM((bt,), jnp.int32),       # argbest
+            pltpu.VMEM((bt, 1), jnp.float32),   # clean best
+            pltpu.VMEM((bt, 1), jnp.float32),   # clean second
         ],
         interpret=interpret,
     )(preds, noise)

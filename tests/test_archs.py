@@ -14,6 +14,10 @@ from repro.configs.base import MoEConfig
 from repro.core.distill import make_train_step
 from repro.models import Model
 
+# 10 architectures x (forward + train + decode): the single largest
+# CPU cost in the suite — scheduled full run only
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import TrainConfig, get_smoke
 from repro.core.distill import (make_decode_step, make_label_step,
@@ -31,6 +32,7 @@ def test_label_step_votes_match_individual_predicts():
     assert gap.shape == (2, 16) and (np.asarray(gap) >= 0).all()
 
 
+@pytest.mark.slow
 def test_distillation_learns_teacher_labels():
     """A student trained on voted labels fits them (distillation works)."""
     cfg = get_smoke("phi4-mini-3.8b").replace(vocab_size=64)

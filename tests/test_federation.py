@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.base import FedKTConfig
 from repro.core.fedkt import run_fedkt, run_pate_central, run_solo
-from repro.core.learners import NNLearner
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.core.partition import homogeneous_partition
 from repro.data.synthetic import tabular_binary
 from repro.federation import (CentralPATEStrategy, FedKTSession,
@@ -81,6 +81,42 @@ def test_party_engines_produce_identical_updates(data, learner):
     upd_v, key_v = party.local_round(key, data["X_public"], 128,
                                      VmapEngine())
     np.testing.assert_array_equal(np.asarray(key_l), np.asarray(key_v))
+    np.testing.assert_array_equal(upd_l.vote_gaps, upd_v.vote_gaps)
+    _tree_equal(upd_l.student_states, upd_v.student_states)
+    assert upd_l.wire_bytes() == upd_v.wire_bytes() > 0
+
+
+@pytest.mark.parametrize("make_learner", [
+    lambda: RFLearner(num_classes=2, num_trees=4, depth=3),
+    lambda: GBDTLearner(num_rounds=6, depth=3),
+], ids=["rf", "gbdt"])
+def test_tree_engines_agree_on_quickstart(data, make_learner):
+    """Acceptance: engine="vmap" with the tree learners reproduces the
+    loop engine's vote labels on the quickstart federation shape — and
+    because stacked tree fits are bit-identical under zero-weight
+    padding, the students and the final model match exactly too."""
+    learner = make_learner()
+    cfg = FedKTConfig(num_parties=5, num_partitions=2, num_subsets=4,
+                      num_classes=2, beta=0.5, seed=0)
+    r_loop = FedKTSession(learner, data, cfg, engine="loop").run()
+    r_vmap = FedKTSession(learner, data, cfg, engine="vmap").run()
+    assert r_loop.accuracy == r_vmap.accuracy
+    _tree_equal(r_loop.student_states, r_vmap.student_states)
+    _tree_equal(r_loop.final_state, r_vmap.final_state)
+
+
+def test_tree_party_update_identical_across_engines(data):
+    """Party-level: identical vote gaps and student states for an
+    RFLearner party under loop vs vmap engines."""
+    learner = RFLearner(num_classes=2, num_trees=4, depth=3)
+    cfg = FedKTConfig(num_parties=1, num_partitions=2, num_subsets=2,
+                      num_classes=2, seed=11)
+    party = Party(party_id=0, X=data["X_train"], y=data["y_train"],
+                  indices=np.arange(512), cfg=cfg, learner=learner,
+                  student_learner=learner)
+    key = jax.random.PRNGKey(0)
+    upd_l, _ = party.local_round(key, data["X_public"], 128, LoopEngine())
+    upd_v, _ = party.local_round(key, data["X_public"], 128, VmapEngine())
     np.testing.assert_array_equal(upd_l.vote_gaps, upd_v.vote_gaps)
     _tree_equal(upd_l.student_states, upd_v.student_states)
     assert upd_l.wire_bytes() == upd_v.wire_bytes() > 0

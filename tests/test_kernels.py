@@ -136,6 +136,7 @@ def test_vote_aggregate_vs_ref(M, T, U):
     preds = jax.random.randint(ks[0], (M, T), 0, U)
     noise = jax.random.laplace(ks[1], (T, U)) * 0.3
     labels_ref, counts = ref.vote_aggregate_ref(preds, U, noise)
+    clean_srt = np.sort(np.asarray(counts), axis=1)
     for impl in ("kernel_interpret", "xla"):
         labels, top1, top2 = ops.votes(preds, U, noise, impl=impl)
         np.testing.assert_array_equal(np.asarray(labels),
@@ -144,6 +145,19 @@ def test_vote_aggregate_vs_ref(M, T, U):
         scores = np.asarray(counts, np.float32) + np.asarray(noise)
         np.testing.assert_allclose(np.asarray(top1),
                                    scores.max(axis=1), atol=1e-4)
+        # one-histogram variant: same noisy labels + CLEAN top-2 (the
+        # kernel's _block_top2/_fold_top2 accumulation across class
+        # blocks — the Lemma-7 gap input)
+        lc, cc, c1, c2 = ops.votes_with_clean(preds, U, noise, impl=impl)
+        np.testing.assert_array_equal(np.asarray(lc),
+                                      np.asarray(labels_ref))
+        np.testing.assert_allclose(np.asarray(c1), clean_srt[:, -1])
+        np.testing.assert_allclose(np.asarray(c2), clean_srt[:, -2])
+        if impl == "xla":
+            np.testing.assert_array_equal(np.asarray(cc),
+                                          np.asarray(counts))
+        else:
+            assert cc is None
 
 
 def test_vote_top2_gap_clean():

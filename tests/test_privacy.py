@@ -41,6 +41,27 @@ def test_eps_monotone_in_gamma():
     assert all(a <= b + 1e-9 for a, b in zip(es, es[1:]))
 
 
+def test_l1_exact_at_most_gap_bound():
+    """The exact Lemma-7 path (full clean histograms) is never looser
+    than the top-2 gap bound at the same (gamma, s); on BINARY
+    histograms the two coincide (the single o != o* term IS the top-2
+    gap term)."""
+    rng = np.random.default_rng(7)
+    gamma, s, T = 0.1, 2, 40
+    # binary: equality
+    counts2 = rng.multinomial(3 * s, [0.5, 0.5], size=T) * s
+    gaps2 = counts2.max(1) - np.sort(counts2, 1)[:, -2]
+    e_exact = P.fedkt_l1_epsilon(counts2, gamma, s, 2, exact=True)
+    e_gap = P.fedkt_l1_epsilon(gaps2, gamma, s, 2)
+    assert abs(e_exact - e_gap) < 1e-9
+    # multiclass: exact is at least as tight
+    counts4 = rng.multinomial(5 * s, [0.4, 0.3, 0.2, 0.1], size=T) * s
+    gaps4 = counts4.max(1) - np.sort(counts4, 1)[:, -2]
+    e_exact4 = P.fedkt_l1_epsilon(counts4, gamma, s, 4, exact=True)
+    e_gap4 = P.fedkt_l1_epsilon(gaps4, gamma, s, 4)
+    assert e_exact4 <= e_gap4 + 1e-9
+
+
 def test_moments_tighter_than_advanced_composition():
     """Paper §B.7: the data-dependent accountant beats advanced
     composition (e.g. cod-rna: 11.2 vs 20.2)."""

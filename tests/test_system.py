@@ -12,6 +12,9 @@ from repro.core.partition import dirichlet_partition
 from repro.data.synthetic import tabular_binary
 from repro.models.smallnets import MLP
 
+# full-size federation runs: minutes of CPU — scheduled full suite only
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def data():

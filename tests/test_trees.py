@@ -42,6 +42,32 @@ def test_gbdt_improves_with_rounds():
     assert accs[1] > 0.9
 
 
+def test_stacked_tree_fits_bit_identical_to_serial():
+    """Zero-weight padding into a shared pow2 bucket: stacked RF/GBDT
+    states equal the serial loop EXACTLY, even when dataset sizes (and
+    hence individual buckets) differ — histograms ignore w == 0 rows."""
+    rng = np.random.default_rng(3)
+    sizes = (40, 70, 130)                # pow2 buckets 64, 128, 256
+    Xs = [rng.normal(0, 1, (n, 6)).astype(np.float32) for n in sizes]
+    ys = [((X[:, 0] > 0).astype(np.int32) ^ (X[:, 1] < 0)).astype(np.int32)
+          for X in Xs]
+    keys = jax.random.split(jax.random.PRNGKey(5), len(sizes))
+    Xq = rng.normal(0, 1, (33, 6)).astype(np.float32)
+
+    for learner in (RFLearner(num_classes=2, num_trees=6, depth=4),
+                    GBDTLearner(num_rounds=8, depth=3)):
+        stacked = learner.fit_stacked(keys, Xs, ys)
+        preds = np.asarray(learner.predict_stacked(stacked, Xq))
+        for i in range(len(sizes)):
+            serial = learner.fit(keys[i], Xs[i], ys[i])
+            sliced = jax.tree.map(lambda leaf: leaf[i], stacked)
+            for a, b in zip(jax.tree.leaves(serial),
+                            jax.tree.leaves(sliced)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            row = np.asarray(learner.predict(sliced, Xq))
+            np.testing.assert_array_equal(preds[i], row)
+
+
 def test_forest_feature_mask_respected():
     """Trees never split on masked features."""
     X, y = _separable()

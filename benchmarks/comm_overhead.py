@@ -1,28 +1,34 @@
 """Paper §3 overhead analysis: FedKT total communication n*M*(s+1) vs
-FedAvg 2*n*M*r — evaluated with REAL serialized model sizes from the
-framework's checkpointing, across the assigned architectures."""
+FedAvg 2*n*M*r — evaluated with the wire codec's MEASURED encoded model
+sizes (framed header + payload, exactly what ``SubprocessTransport``
+puts on the wire), across the assigned architectures."""
 from __future__ import annotations
 
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.federation import codec, pytree_bytes
 from repro.models import Model
 from benchmarks.common import Emitter
 
 
-def _param_bytes(cfg) -> int:
+def _model_shapes(cfg):
     model = Model(cfg)
-    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
 
 
 def run(em: Emitter, quick=True):
     n, s = 10, 2
     archs = ARCH_IDS if not quick else ARCH_IDS[:4]
     for arch in archs:
-        M = _param_bytes(get_config(arch))
+        shapes = _model_shapes(get_config(arch))
+        # exact encoded size (codec.encoded_nbytes works on eval_shape
+        # trees, so multi-GB models are priced without materializing)
+        M = codec.encoded_nbytes(shapes)
         fedkt = n * M * (s + 1)
         em.emit("overhead", arch, "model_bytes", M)
+        em.emit("overhead", arch, "model_payload_bytes",
+                pytree_bytes(shapes))
         em.emit("overhead", arch, "fedkt_total_bytes", fedkt)
         for r in (2, 10, 50):
             em.emit("overhead", arch, f"fedavg_{r}r_bytes", 2 * n * M * r)

@@ -12,8 +12,16 @@ claim:
        one stacked fit — with zero-weight padding the results are
        bit-identical to the serial loop.
 
-Both engines run the identical protocol and PRNG schedule.  Writes the
-headline numbers to BENCH_federation_engines.json at the repo root.
+A third, parallel-parties row fans the nn config's five parties out
+over the thread transport (loop engine — its per-party dispatch gaps
+are what fan-out overlaps; vmap already saturates the cores from one
+party) and records the MEASURED PartyUpdate wire bytes — the
+codec-framed size that actually crossed the party/server boundary, not
+a pytree-size estimate.
+
+All engines and transports run the identical protocol and PRNG
+schedule.  Writes the headline numbers to BENCH_federation_engines.json
+at the repo root.
 
     PYTHONPATH=src python -m benchmarks.engines_bench
 """
@@ -89,10 +97,62 @@ def bench_one(setup, repeats):
     return row
 
 
+def bench_parallel_parties(setup, repeats):
+    """Parallel-parties row: serial in-process transport vs the thread
+    transport (one worker per party), plus the measured codec-framed
+    PartyUpdate wire bytes.  Uses the loop engine: its per-party
+    dispatch gaps are what fan-out overlaps (the vmap engine already
+    saturates the host's cores from a single party, so threads add
+    nothing there)."""
+    learner, data, cfg, desc = setup()
+    row = {"config": {"num_parties": cfg.num_parties,
+                      "num_partitions": cfg.num_partitions,
+                      "num_subsets": cfg.num_subsets,
+                      "learner": desc, "engine": "loop",
+                      "parallelism": cfg.num_parties},
+           "transports": {}}
+    results = {}
+    for transport in ("inprocess", "thread"):
+        kw = dict(engine="loop", transport=transport)
+        if transport != "inprocess":
+            kw["parallelism"] = cfg.num_parties
+        t0 = time.time()
+        res = FedKTSession(learner, data, cfg, **kw).run()
+        cold = time.time() - t0
+        warms = []
+        for _ in range(repeats):
+            t0 = time.time()
+            res = FedKTSession(learner, data, cfg, **kw).run()
+            warms.append(time.time() - t0)
+        results[transport] = res
+        row["transports"][transport] = {
+            "cold_s": round(cold, 3),
+            "warm_s": round(sorted(warms)[len(warms) // 2], 3),
+            "warm_runs_s": [round(w, 3) for w in warms],
+            "accuracy": round(res.accuracy, 4),
+            "parties_s": res.meta["seconds"]["parties"],
+        }
+    t = row["transports"]
+    row["warm_speedup_thread_over_inprocess"] = round(
+        t["inprocess"]["warm_s"] / t["thread"]["warm_s"], 2)
+    row["accuracies_agree"] = bool(
+        results["inprocess"].accuracy == results["thread"].accuracy)
+    wire = results["thread"].meta["wire_bytes"]
+    row["wire_bytes"] = {
+        "updates_measured": wire["updates"],          # codec-framed truth
+        "updates_payload": wire["updates_payload"],   # raw-array accounting
+        "labels": wire["labels"],
+    }
+    return row
+
+
 def bench(repeats=REPEATS, write=True, names=None):
     rec = {"repeats": repeats, "benches": {}}
     for name in (names or SETUPS):
         rec["benches"][name] = bench_one(SETUPS[name], repeats)
+    if names is None or "nn" in names:
+        rec["benches"]["nn_parallel_parties"] = bench_parallel_parties(
+            nn_setup, repeats)
     if write:
         with open(OUT, "w") as f:
             json.dump(rec, f, indent=1)
@@ -105,11 +165,18 @@ def run(em, quick=True):
     overwrite the committed BENCH record with quick-mode numbers."""
     rec = bench(repeats=1 if quick else REPEATS, write=not quick)
     for name, row in rec["benches"].items():
-        for engine, r in row["engines"].items():
+        for engine, r in row.get("engines", {}).items():
             em.emit("engines", f"{name}/{engine}", "warm_s", r["warm_s"])
             em.emit("engines", f"{name}/{engine}", "acc", r["accuracy"])
-        em.emit("engines", f"{name}/vmap_over_loop", "warm_speedup",
-                row["warm_speedup_vmap_over_loop"])
+        for transport, r in row.get("transports", {}).items():
+            em.emit("engines", f"{name}/{transport}", "warm_s",
+                    r["warm_s"])
+        if "warm_speedup_vmap_over_loop" in row:
+            em.emit("engines", f"{name}/vmap_over_loop", "warm_speedup",
+                    row["warm_speedup_vmap_over_loop"])
+        if "wire_bytes" in row:
+            em.emit("engines", f"{name}/wire", "updates_measured_bytes",
+                    row["wire_bytes"]["updates_measured"])
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import manifest, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (flatten_tree,  # noqa: F401
+                                         manifest, restore, save)

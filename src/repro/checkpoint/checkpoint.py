@@ -15,14 +15,19 @@ import numpy as np
 _SEP = "/"
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
+def flatten_tree(tree) -> Dict[str, Any]:
+    """Path-keyed leaves: each leaf under its '/'-joined key path
+    (dict keys and sequence indices).  Leaves are returned as-is, so
+    this works on concrete arrays AND on ShapeDtypeStructs (abstract
+    lowering).  Shared by checkpoint save/restore and the federation
+    wire codec (federation/codec.py)."""
     flat = {}
 
     def f(kp, leaf):
         keys = []
         for k in kp:
             keys.append(str(getattr(k, "key", getattr(k, "idx", k))))
-        flat[_SEP.join(keys)] = np.asarray(leaf)
+        flat[_SEP.join(keys)] = leaf
         return leaf
 
     jax.tree_util.tree_map_with_path(f, tree)
@@ -32,7 +37,7 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 def save(path: str, tree, step: Optional[int] = None,
          metrics: Optional[Dict[str, Any]] = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(tree)
+    flat = {p: np.asarray(l) for p, l in flatten_tree(tree).items()}
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
     manifest = {"step": step, "metrics": metrics or {},
                 "leaves": sorted(flat)}

@@ -1,4 +1,1 @@
-from repro.core.fedkt import (  # noqa: F401
-    FedKTResult, run_fedkt, run_pate_central, run_solo,
-)
 from repro.core.voting import consistent_vote, teacher_vote  # noqa: F401

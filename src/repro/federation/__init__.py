@@ -2,10 +2,18 @@
 
     Party / Server / FedKTSession  — the protocol (who sends what, once)
     engines.LoopEngine / VmapEngine — how teachers train (pluggable)
+    codec                           — PartyUpdate <-> self-describing bytes
+    transport.{InProcess,Thread,Subprocess}Transport
+                                    — where parties run, how the ONE
+                                      message crosses the silo boundary
+                                      (always serialized via the codec)
     strategies.*                    — every compared algorithm, one shape
 
-See session.FedKTSession for the entry point.
+See session.FedKTSession for the entry point; its ``transport=`` /
+``parallelism=`` knobs fan independent parties out across threads or
+worker processes with unchanged seeds.
 """
+from repro.federation import codec  # noqa: F401
 from repro.federation.engines import (Engine, LoopEngine,  # noqa: F401
                                       VmapEngine, get_engine)
 from repro.federation.messages import (PartyUpdate,  # noqa: F401
@@ -18,3 +26,7 @@ from repro.federation.strategies import (CentralPATEStrategy,  # noqa: F401
                                          FedKTStrategy, IterativeStrategy,
                                          SoloStrategy, Strategy,
                                          StrategyResult)
+from repro.federation.transport import (InProcessTransport,  # noqa: F401
+                                        SubprocessTransport,
+                                        ThreadTransport, Transport,
+                                        get_transport)

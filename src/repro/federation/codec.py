@@ -1,0 +1,178 @@
+"""Wire codec for the federation protocol: pytrees <-> bytes.
+
+A serialized message is self-describing — no pytree template on the
+receiving side:
+
+    MAGIC | uint32 header_len | header JSON | payload
+
+The header carries the tree structure (dict/list/tuple/None nesting,
+leaves referenced by their checkpoint-style '/'-joined key path) plus
+per-leaf shape/dtype/offset; the payload is the raw leaf bytes
+concatenated in sorted-path order.  Leaf flattening is shared with
+``checkpoint/checkpoint.py`` (``flatten_tree``), so the paths on the
+wire are the same paths a checkpoint manifest records.
+
+Because every header field is computable from shapes alone,
+``encoded_nbytes`` prices a message exactly — header included — from a
+``jax.eval_shape`` tree without materializing any array (used by
+launch/fedkt_dryrun.py and benchmarks/comm_overhead.py, where the
+full-size LM states never exist concretely).
+
+Decoded leaves come back as numpy arrays (bit-identical bytes, same
+shape/dtype); container types round-trip as dict/list/tuple/None.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import _SEP, flatten_tree
+from repro.federation.messages import PartyUpdate
+
+MAGIC = b"FKT1"
+_LEN = struct.Struct("<I")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype by name, falling back to ml_dtypes for the jax extended
+    float families (bfloat16, float8_*) numpy does not name natively."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _structure(tree, path: List[str]) -> Any:
+    """JSON-able structure descriptor; leaves reference their
+    flatten_tree path."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        keys = list(tree)
+        for k in keys:
+            if not isinstance(k, str) or _SEP in k:
+                raise TypeError(f"codec requires {_SEP!r}-free string "
+                                f"dict keys, got {k!r}")
+        return {"t": "dict", "k": keys,
+                "c": [_structure(tree[k], path + [k]) for k in keys]}
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {"t": kind,
+                "c": [_structure(v, path + [str(i)])
+                      for i, v in enumerate(tree)]}
+    return {"t": "leaf", "p": _SEP.join(path)}
+
+
+def _header(tree, extra: Dict[str, Any] = None) -> Tuple[bytes, list]:
+    """(header bytes, [(path, leaf)] in payload order)."""
+    flat = flatten_tree(tree)
+    # normalize bare python scalars; arrays and ShapeDtypeStructs
+    # (abstract mode) already carry shape/dtype
+    flat = {p: leaf if hasattr(leaf, "shape") else np.asarray(leaf)
+            for p, leaf in flat.items()}
+    order = sorted(flat)
+    leaves, off = [], 0
+    for p in order:
+        leaf = flat[p]
+        shape = tuple(int(d) for d in leaf.shape)
+        dtype = np.dtype(leaf.dtype)
+        n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        leaves.append({"p": p, "shape": list(shape), "dtype": dtype.name,
+                       "off": off, "n": n})
+        off += n
+    header = {"v": 1, "tree": _structure(tree, []), "leaves": leaves,
+              **(extra or {})}
+    return (json.dumps(header, sort_keys=True).encode("utf-8"),
+            [(p, flat[p]) for p in order])
+
+
+def encode(tree, extra_header: Dict[str, Any] = None) -> bytes:
+    """Serializes a pytree of arrays into one self-describing buffer."""
+    hdr, ordered = _header(tree, extra_header)
+    parts = [MAGIC, _LEN.pack(len(hdr)), hdr]
+    parts += [np.ascontiguousarray(np.asarray(leaf)).tobytes()
+              for _, leaf in ordered]
+    return b"".join(parts)
+
+
+def encoded_nbytes(tree, extra_header: Dict[str, Any] = None) -> int:
+    """Exact wire size of ``encode(tree)`` — header, framing, payload —
+    computed from leaf shapes/dtypes only.  Works on concrete arrays and
+    on ShapeDtypeStructs (jax.eval_shape), so full-size LM messages can
+    be priced without materializing a single parameter."""
+    hdr, ordered = _header(tree, extra_header)
+    payload = sum(int(np.prod(leaf.shape, dtype=np.int64))
+                  * np.dtype(leaf.dtype).itemsize for _, leaf in ordered)
+    return len(MAGIC) + _LEN.size + len(hdr) + payload
+
+
+def decode(buf: bytes) -> Tuple[Any, Dict[str, Any]]:
+    """Inverse of ``encode``: (pytree of numpy arrays, header dict)."""
+    if buf[:len(MAGIC)] != MAGIC:
+        raise ValueError("not a federation codec buffer (bad magic)")
+    hlen = _LEN.unpack_from(buf, len(MAGIC))[0]
+    start = len(MAGIC) + _LEN.size
+    header = json.loads(buf[start:start + hlen].decode("utf-8"))
+    base = start + hlen
+    arrays = {}
+    for leaf in header["leaves"]:
+        dtype = _np_dtype(leaf["dtype"])
+        count = int(np.prod(leaf["shape"], dtype=np.int64))
+        arr = np.frombuffer(buf, dtype=dtype, count=count,
+                            offset=base + leaf["off"])
+        arrays[leaf["p"]] = arr.reshape(leaf["shape"]).copy()
+
+    def rebuild(spec):
+        t = spec["t"]
+        if t == "none":
+            return None
+        if t == "dict":
+            return {k: rebuild(c) for k, c in zip(spec["k"], spec["c"])}
+        if t == "list":
+            return [rebuild(c) for c in spec["c"]]
+        if t == "tuple":
+            return tuple(rebuild(c) for c in spec["c"])
+        return arrays[spec["p"]]
+
+    return rebuild(header["tree"]), header
+
+
+# ---------------------------------------------------------------------------
+# PartyUpdate framing
+# ---------------------------------------------------------------------------
+def _update_tree(update: PartyUpdate):
+    return {"student_states": update.student_states,
+            "vote_gaps": update.vote_gaps}
+
+
+def _update_extra(update: PartyUpdate) -> Dict[str, Any]:
+    return {"kind": "PartyUpdate", "party_id": int(update.party_id),
+            "num_examples": int(update.num_examples),
+            "meta": dict(update.meta)}
+
+
+def encode_update(update: PartyUpdate) -> bytes:
+    """The cross-process PartyUpdate message: student states AND the
+    vote-gap trace in the payload, scalar fields in the header."""
+    return encode(_update_tree(update), _update_extra(update))
+
+
+def decode_update(buf: bytes) -> PartyUpdate:
+    tree, header = decode(buf)
+    if header.get("kind") != "PartyUpdate":
+        raise ValueError(f"expected a PartyUpdate message, "
+                         f"got kind={header.get('kind')!r}")
+    return PartyUpdate(party_id=header["party_id"],
+                       student_states=tree["student_states"],
+                       vote_gaps=tree["vote_gaps"],
+                       num_examples=header["num_examples"],
+                       meta=dict(header["meta"]))
+
+
+def update_encoded_nbytes(update: PartyUpdate) -> int:
+    """Measured wire size of one PartyUpdate (header + payload)."""
+    return encoded_nbytes(_update_tree(update), _update_extra(update))

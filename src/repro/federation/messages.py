@@ -9,9 +9,12 @@ The one-shot protocol exchanges exactly one message kind per direction:
                 (n * s models on the wire, total).
   RoundResult : server -> caller.  Final model, accounting, metrics.
 
-Keeping these as plain dataclasses over pytrees makes the next steps
-(cross-process serialization, async parties) a transport concern, not
-an algorithm change.
+These stay plain dataclasses over pytrees; HOW a PartyUpdate crosses
+the silo boundary is a transport concern (federation/transport.py) and
+its byte form is the wire codec's (federation/codec.py) — every
+transport serializes the update, so ``meta["encoded_bytes"]`` on a
+received update is its measured wire size, and ``pytree_bytes`` here
+remains the raw-array accounting the codec's payload matches exactly.
 """
 from __future__ import annotations
 
@@ -52,10 +55,13 @@ class PartyUpdate:
     meta: Dict[str, Any] = field(default_factory=dict)
 
     def wire_bytes(self) -> int:
-        """Bytes this update puts on the wire (student states only: the
-        gap trace stays party-side under L2; it is included here for the
-        trusted-aggregator L1 setting where the server accounts)."""
-        return pytree_bytes(self.student_states)
+        """Payload bytes this update puts on the wire: the s student
+        states PLUS the vote-gap trace — both ride in the same message
+        (the server composes the parties' gap traces for the L2 bound
+        and the trusted aggregator accounts under L1).  Matches the
+        codec's measured payload exactly; the codec's framed size adds
+        only the header (cross-checked in tests/test_transport.py)."""
+        return pytree_bytes(self.student_states) + pytree_bytes(self.vote_gaps)
 
 
 @dataclass

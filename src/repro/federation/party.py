@@ -54,6 +54,15 @@ class Party:
             student_keys.append(kk)
         return teacher_keys, vote_keys, student_keys, key
 
+    def advance_key(self, key):
+        """The key ``local_round`` would return, WITHOUT training: the
+        schedule consumes a fixed split count (s * (t + 2)), so the
+        session can precompute every party's starting key and fan the
+        parties out in parallel with unchanged serial-loop seeds."""
+        cfg = self.cfg
+        return self._key_schedule(key, cfg.num_partitions,
+                                  cfg.num_subsets)[3]
+
     def local_round(self, key, X_public, num_queries: int, engine: Engine):
         """Runs the party side of the single round.
 

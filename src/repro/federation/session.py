@@ -2,15 +2,25 @@
 
 The session owns everything that spans the party/server boundary —
 PRNG threading, the query-budget split, privacy accounting, and round
-metrics — while Party/Server own their protocol sides and an Engine
-owns teacher execution.  One session == one round == one result:
+metrics — while Party/Server own their protocol sides, an Engine owns
+teacher execution, and a Transport owns WHERE parties run and how their
+one PartyUpdate message travels (serialized through the wire codec in
+every mode).  One session == one round == one result:
 
     session = FedKTSession(learner, data, cfg, engine="vmap")
     result = session.run()        # RoundResult
 
+    # cross-process silos: each party's round in its own interpreter,
+    # fanned out over ``parallelism`` workers
+    FedKTSession(learner, data, cfg, transport="subprocess",
+                 parallelism=4).run()
+
 Seed contract: with ``engine="loop"`` the session reproduces the legacy
-``run_fedkt`` accuracy and epsilon bit-for-bit at a fixed cfg.seed
-(test-enforced in tests/test_federation.py).
+``run_fedkt`` accuracy and epsilon bit-for-bit at a fixed cfg.seed, and
+every transport reproduces the in-process result bit-for-bit — party
+keys are precomputed from the serial schedule, so fan-out order never
+changes any party's randomness (test-enforced in
+tests/test_federation.py and tests/test_transport.py).
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ from repro.federation.messages import (PartyUpdate, RoundResult,
                                        label_wire_bytes)
 from repro.federation.party import Party
 from repro.federation.server import Server
+from repro.federation.transport import get_transport
 
 
 def query_budget(cfg: FedKTConfig, num_public: int):
@@ -44,17 +55,25 @@ class FedKTSession:
 
     data: dict with X_train/y_train/X_public/X_test/y_test arrays.
     engine: "loop" | "vmap" | an engines.Engine instance.
+    transport: "inprocess" | "thread" | "subprocess" | a
+        transport.Transport instance — where the party rounds run and
+        how their updates cross the party/server boundary.
+    parallelism: worker count for the fan-out transports (defaults to
+        one worker per party; must be omitted when passing a transport
+        instance).
     """
 
     def __init__(self, learner, data: Dict[str, np.ndarray],
                  cfg: FedKTConfig, *, student_learner=None,
-                 final_learner=None, engine="loop", party_indices=None):
+                 final_learner=None, engine="loop", party_indices=None,
+                 transport="inprocess", parallelism=None):
         self.learner = learner
         self.student_learner = student_learner or learner
         self.final_learner = final_learner or learner
         self.data = data
         self.cfg = cfg
         self.engine = get_engine(engine)
+        self.transport = get_transport(transport, parallelism)
 
         ytr = data["y_train"]
         if party_indices is None:
@@ -69,22 +88,31 @@ class FedKTSession:
         self.tq_party, self.tq_server = query_budget(cfg,
                                                      len(data["X_public"]))
 
+    def _party_keys(self, key):
+        """Every party's starting key (the serial loop's exact split
+        positions, played forward without training) plus the key the
+        server side continues from."""
+        keys = []
+        for party in self.parties:
+            keys.append(key)
+            key = party.advance_key(key)
+        return keys, key
+
     def run(self, verbose: bool = False) -> RoundResult:
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed)
         Xpub = self.data["X_public"]
 
         t0 = time.time()
-        updates: List[PartyUpdate] = []
-        for party in self.parties:
-            upd, key = party.local_round(key, Xpub, self.tq_party,
-                                         self.engine)
-            updates.append(upd)
-            if verbose:
-                print(f"party {party.party_id}: {party.num_examples} "
-                      f"examples, {cfg.num_partitions}x{cfg.num_subsets} "
-                      f"teachers trained")
+        party_keys, key = self._party_keys(key)
+        updates: List[PartyUpdate] = self.transport.run_round(
+            self.parties, party_keys, Xpub, self.tq_party, self.engine)
         t_parties = time.time() - t0
+        if verbose:
+            for party, upd in zip(self.parties, updates):
+                print(f"party {party.party_id}: {party.num_examples} "
+                      f"examples, {upd.meta['num_teachers']} teachers "
+                      f"trained, {upd.meta['encoded_bytes']} wire bytes")
 
         t0 = time.time()
         final_state, vote, key = self.server.aggregate(
@@ -98,11 +126,19 @@ class FedKTSession:
         meta: Dict[str, Any] = {
             "party_sizes": [p.num_examples for p in self.parties],
             "engine": self.engine.name,
+            "transport": self.transport.name,
+            "parallelism": getattr(self.transport, "parallelism", None),
             "queries": {"party": self.tq_party, "server": self.tq_server},
             "seconds": {"parties": round(t_parties, 3),
                         "server": round(t_server, 3)},
             "wire_bytes": {
-                "updates": int(sum(u.wire_bytes() for u in updates)),
+                # measured: the codec-framed bytes that actually crossed
+                # the party/server boundary (header + payload)
+                "updates": int(sum(u.meta["encoded_bytes"]
+                                   for u in updates)),
+                # accounted: raw array payload (students + gap trace)
+                "updates_payload": int(sum(u.wire_bytes()
+                                           for u in updates)),
                 "labels": label_wire_bytes(self.tq_party) * len(updates),
             },
         }

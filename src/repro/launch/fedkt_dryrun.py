@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.distill import make_label_step
+from repro.federation import codec
 from repro.federation.messages import label_wire_bytes, pytree_bytes
 from repro.launch import analysis
 from repro.launch.dryrun import effective_periods, probe_cfg
@@ -105,12 +106,16 @@ def main():
     rec["members"] = args.members
     # the one-round protocol cost, priced like a federation PartyUpdate:
     # each member ships its student state once; vote labels come back as
-    # O(T) integers regardless of vocab or member count
+    # O(T) integers regardless of vocab or member count.  Sizes are the
+    # wire codec's exact framed bytes (header included), computed from
+    # eval_shape without materializing the member — not a raw-array
+    # estimate.
     one_member = jax.eval_shape(lambda: Model(cfg).init(
         jax.random.PRNGKey(0)))
     rec["protocol"] = {
         "members": args.members,
-        "update_bytes_per_member": pytree_bytes(one_member),
+        "update_bytes_per_member": codec.encoded_nbytes(one_member),
+        "update_payload_bytes_per_member": pytree_bytes(one_member),
         "label_bytes": label_wire_bytes(args.batch * args.seq),
     }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

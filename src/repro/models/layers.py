@@ -112,6 +112,22 @@ def grow_attn_cache(cache, target_len):
     return jax.tree.map(pad, cache)
 
 
+def ring_attn_cache(cache, window, cur):
+    """Converts a linear prefill cache holding positions [0, cur) with
+    ``cur > window`` into a ``window``-slot ring: keeps the last
+    ``window`` keys, rolled so the key for position p sits at slot
+    p % window — the slot the next decode write (at pos % window)
+    overwrites is then exactly the oldest live position."""
+    shift = cur % window
+
+    def conv(leaf):
+        axis = leaf.ndim + ATTN_CACHE_LEN_AXIS
+        idx = [slice(None)] * leaf.ndim
+        idx[axis] = slice(cur - window, cur)
+        return jnp.roll(leaf[tuple(idx)], shift, axis=axis)
+    return jax.tree.map(conv, cache)
+
+
 def attn_apply(cfg: ModelConfig, p, x, *, kind=ATTN, mode="train",
                cache=None, pos=None, impl="auto", causal=True,
                use_rope=True):

@@ -137,16 +137,24 @@ def grow_cache(cfg: ModelConfig, cache, extra_tokens: int):
     which blocks are attention (grow along the tagged length axis),
     which are sliding-window (ring buffers never need more than
     ``window`` slots), and which are recurrent state (RGLRU/RWKV: no
-    length axis, returned untouched) — no shape guessing."""
+    length axis, returned untouched) — no shape guessing.
+
+    Sliding-window blocks come out of prefill with a LINEAR cache of the
+    full prompt length; when the prompt is longer than the window that
+    cache is shrunk to a ``window``-slot ring (last ``window`` keys, in
+    slot order p % window) so decode writes at pos % window land on the
+    oldest live key instead of clamping past the buffer end."""
     def grow_block(kind, c):
         if kind not in (ATTN, ATTN_LOCAL):
             return c
         leaf = c["k"]
         cur = leaf.shape[leaf.ndim + L.ATTN_CACHE_LEN_AXIS]
-        target = cur + extra_tokens
         if kind == ATTN_LOCAL:
-            target = min(target, cfg.window)
-        return L.grow_attn_cache(c, target)
+            if cur > cfg.window:
+                return L.ring_attn_cache(c, cfg.window, cur)
+            return L.grow_attn_cache(c, min(cur + extra_tokens,
+                                            cfg.window))
+        return L.grow_attn_cache(c, cur + extra_tokens)
 
     fkd, nper, tail = _layer_plan(cfg)
     out = {"head_blocks": [grow_block(cfg.pattern[0], c)

@@ -123,6 +123,44 @@ def test_ring_cache_matches_full_window_cache():
     assert err < 1e-4, f"ring cache mismatch {err}"
 
 
+@pytest.mark.parametrize("prompt_minus_window", [32, 0, -32],
+                         ids=["longer", "equal", "shorter"])
+def test_prefill_vs_window_decode_matches_full_forward(
+        prompt_minus_window):
+    """Regression for the sliding-window cache-growth bug: a prefill
+    LONGER than the window used to leave the ATTN_LOCAL cache linear at
+    prompt length, so decode writes at absolute pos clamped out of
+    bounds (silently wrong logits, ~0.15 divergence on the gemma2
+    smoke).  grow_cache now shrinks the over-long linear cache into a
+    ``window``-slot ring (last window keys, slot order p % window).
+    The == / < window cases pin the pre-existing grow path."""
+    cfg = get_smoke("gemma2-27b").replace(dtype="float32",
+                                          param_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, G = 1, 6
+    S = cfg.window + prompt_minus_window     # 96 / 64 / 32 vs window 64
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + G)),
+                       jnp.int32)
+    full, _ = model.logits(params, {"tokens": toks}, mode="train")
+    _, cache, _ = model.hidden(params, {"tokens": toks[:, :S]},
+                               mode="prefill")
+    cache = model.grow_cache(cache, G)
+    for i in range(G):
+        lg, cache = model.logits(params, {"tokens": toks[:, S+i:S+i+1]},
+                                 mode="decode", cache=cache,
+                                 pos=jnp.int32(S + i))
+        err = float(jnp.abs(lg[:, 0] - full[:, S + i]).max())
+        assert err < 1e-4, f"decode step {i}: mismatch {err}"
+    # the local caches are window-bounded rings while the global caches
+    # grew to the full prompt + decode length
+    from repro.models.layers import ATTN_CACHE_LEN_AXIS
+    lens = {leaf.shape[leaf.ndim + ATTN_CACHE_LEN_AXIS]
+            for leaf in jax.tree.leaves(cache) if leaf.ndim >= 4}
+    assert lens == {min(S + G, cfg.window), S + G}
+
+
 def test_moe_dispatch_matches_dense_oracle():
     """Capacity dispatch == dense all-experts oracle when no drops."""
     from repro.models import moe as M

@@ -5,10 +5,11 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FedKTConfig
-from repro.core.baselines import IterConfig, run_iterative
-from repro.core.fedkt import run_fedkt, run_pate_central, run_solo
+from repro.core.baselines import IterConfig
 from repro.core.learners import NNLearner
 from repro.core.partition import dirichlet_partition
+from repro.federation import (CentralPATEStrategy, FedKTSession,
+                              IterativeStrategy, SoloStrategy)
 from repro.data.synthetic import tabular_binary
 from repro.models.smallnets import MLP
 
@@ -33,18 +34,18 @@ def fedkt_result(data, learner):
     # plenty of data) and the paper's gap only appears under label skew
     cfg = FedKTConfig(num_parties=8, num_partitions=2, num_subsets=2,
                       num_classes=2, beta=0.3, seed=0)
-    return cfg, run_fedkt(learner, data, cfg)
+    return cfg, FedKTSession(learner, data, cfg, engine="loop").run()
 
 
 def test_fedkt_beats_solo(data, learner, fedkt_result):
     cfg, res = fedkt_result
-    solo = run_solo(learner, data, cfg)
+    solo = SoloStrategy(learner).run(data, cfg).accuracy
     assert res.accuracy > solo + 0.02, (res.accuracy, solo)
 
 
 def test_fedkt_close_to_central_pate(data, learner, fedkt_result):
     cfg, res = fedkt_result
-    pate = run_pate_central(learner, data, cfg)
+    pate = CentralPATEStrategy(learner).run(data, cfg).accuracy
     assert res.accuracy > pate - 0.08, (res.accuracy, pate)
 
 
@@ -53,10 +54,11 @@ def test_fedkt_beats_two_round_fedavg(data, learner, fedkt_result):
     cfg, res = fedkt_result
     parts = dirichlet_partition(data["y_train"], cfg.num_parties, cfg.beta,
                                 cfg.seed)
-    out = run_iterative(MLP(14, 2, hidden=32), data,
-                        IterConfig(algo="fedavg", rounds=2, local_steps=50),
-                        party_indices=parts)
-    assert res.accuracy > out["acc_per_round"][-1] - 0.02
+    out = IterativeStrategy(
+        MLP(14, 2, hidden=32),
+        IterConfig(algo="fedavg", rounds=2, local_steps=50)).run(
+            data, party_indices=parts)
+    assert res.accuracy > out.meta["acc_per_round"][-1] - 0.02
 
 
 def test_fedkt_dp_eps_reported(data, learner):
@@ -68,7 +70,7 @@ def test_fedkt_dp_eps_reported(data, learner):
         cfg = FedKTConfig(num_parties=4, num_partitions=1, num_subsets=3,
                           num_classes=2, privacy_level="L1", gamma=gamma,
                           query_fraction=0.1, seed=0)
-        res = run_fedkt(learner, data, cfg)
+        res = FedKTSession(learner, data, cfg, engine="loop").run()
         assert res.epsilon is not None and 0 < res.epsilon < 1000
         assert res.accuracy > 0.3
         eps[gamma] = res.epsilon

@@ -1,0 +1,238 @@
+"""Transport layer: codec round-trips, wire accounting, and
+cross-transport bit-identity of the federation round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.configs.base import FedKTConfig
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
+from repro.data.synthetic import tabular_binary
+from repro.federation import (FedKTSession, InProcessTransport, PartyUpdate,
+                              ThreadTransport, codec, get_transport,
+                              pytree_bytes)
+from repro.models.smallnets import MLP
+
+
+@pytest.fixture(scope="module")
+def data():
+    return tabular_binary(n=512, seed=0)
+
+
+@pytest.fixture(scope="module")
+def learner():
+    return NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=20)
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype and la.shape == lb.shape
+        np.testing.assert_array_equal(la, lb)
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+def _roundtrip(tree):
+    buf = codec.encode(tree)
+    out, header = codec.decode(buf)
+    assert codec.encoded_nbytes(tree) == len(buf)
+    return out, buf
+
+
+@pytest.mark.parametrize("make_learner", [
+    lambda: NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=10),
+    lambda: RFLearner(num_classes=2, num_trees=3, depth=2),
+    lambda: GBDTLearner(num_rounds=3, depth=2),
+], ids=["nn", "rf", "gbdt"])
+def test_codec_roundtrips_student_states(data, make_learner):
+    """encode∘decode identity over every student-state pytree kind the
+    protocol ships (dict params, nested forest/edges tuples)."""
+    lrn = make_learner()
+    states = [lrn.fit(jax.random.fold_in(jax.random.PRNGKey(0), i),
+                      data["X_train"][:64], data["y_train"][:64])
+              for i in range(2)]
+    out, buf = _roundtrip({"students": states})
+    _tree_equal(states, out["students"])
+    assert isinstance(out["students"], list)
+
+
+def test_codec_mixed_dtypes_and_containers():
+    tree = {
+        "f32": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "f64": np.linspace(0, 1, 4),
+        "f16": np.ones((3,), np.float16),
+        "bf16": jnp.full((2, 2), 1.5, jnp.bfloat16),
+        "ints": (np.int32(7), np.arange(3, dtype=np.int64),
+                 np.array(255, np.uint8)),
+        "flags": [np.array([True, False]), None],
+        "nested": {"deep": [({"x": np.zeros((1, 2), np.int16)},)]},
+    }
+    out, _ = _roundtrip(tree)
+    _tree_equal(tree, out)
+    assert out["flags"][1] is None
+    assert isinstance(out["ints"], tuple)
+    assert isinstance(out["nested"]["deep"][0], tuple)
+    assert out["bf16"].dtype == jnp.bfloat16
+
+
+def test_codec_empty_leaves_and_containers():
+    tree = {"empty1d": np.zeros((0,), np.float32),
+            "empty3d": np.zeros((3, 0, 2), np.int32),
+            "scalar": np.float64(3.5),
+            "emptydict": {}, "emptylist": [], "none": None}
+    out, buf = _roundtrip(tree)
+    _tree_equal(tree, out)
+    assert out["emptydict"] == {} and out["emptylist"] == []
+    assert out["none"] is None
+    # empty payload entries contribute zero bytes but keep shape/dtype
+    assert out["empty3d"].shape == (3, 0, 2)
+
+
+def test_codec_abstract_sizing_matches_concrete():
+    """encoded_nbytes prices a message exactly from eval_shape — the
+    dry-run / comm-overhead path for models too big to materialize."""
+    # float32 throughout: eval_shape re-types leaves under jax's default
+    # x64-disabled config, and the point here is size parity
+    tree = {"w": np.zeros((8, 4), np.float32),
+            "b": np.zeros((4,), np.float32)}
+    abstract = jax.eval_shape(lambda: tree)
+    assert codec.encoded_nbytes(abstract) == len(codec.encode(tree))
+
+
+def test_codec_rejects_bad_input():
+    with pytest.raises(ValueError):
+        codec.decode(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(TypeError):
+        codec.encode({"bad/key": np.zeros(1)})
+    with pytest.raises(TypeError):
+        codec.encode({1: np.zeros(1)})
+    with pytest.raises(ValueError):
+        codec.decode_update(codec.encode({"w": np.zeros(1)}))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_codec_roundtrip_property(seed, depth):
+    """Random nested dict/list/tuple trees over random dtypes/shapes
+    (including empty dims) survive encode∘decode bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    dtypes = [np.float32, np.float64, np.int32, np.int64, np.uint8,
+              np.float16, bool]
+
+    def leaf():
+        shape = tuple(int(d) for d in
+                      rng.integers(0, 4, size=rng.integers(0, 3)))
+        dt = dtypes[rng.integers(len(dtypes))]
+        return (rng.integers(0, 2, size=shape).astype(dt) if dt is bool
+                else rng.normal(0, 1, size=shape).astype(dt))
+
+    def build(d):
+        if d == 0 or rng.random() < 0.3:
+            return leaf()
+        kind = rng.integers(4)
+        n = int(rng.integers(0, 3))
+        if kind == 0:
+            return {f"k{i}": build(d - 1) for i in range(n)}
+        if kind == 1:
+            return [build(d - 1) for _ in range(n)]
+        if kind == 2:
+            return tuple(build(d - 1) for _ in range(n))
+        return None
+
+    tree = {"root": build(depth)}
+    out, _ = _roundtrip(tree)
+    _tree_equal(tree, out)
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting
+# ---------------------------------------------------------------------------
+def test_update_wire_bytes_counts_gap_trace():
+    """The L1 accounting bug: vote_gaps ride in the same message as the
+    student states, so wire_bytes must count both — and must equal the
+    codec's measured payload exactly (framed size adds only header)."""
+    states = [{"w": np.zeros((4, 2), np.float32)}]
+    gaps = np.arange(16, dtype=np.float64)
+    upd = PartyUpdate(party_id=0, student_states=states, vote_gaps=gaps,
+                      num_examples=10, meta={"num_teachers": 2})
+    assert upd.wire_bytes() == pytree_bytes(states) + gaps.nbytes
+    buf = codec.encode_update(upd)
+    measured = len(buf)
+    assert codec.update_encoded_nbytes(upd) == measured
+    # framed = header + payload; payload is exactly the accounted bytes
+    header_overhead = measured - upd.wire_bytes()
+    assert 0 < header_overhead < 4096
+    dec = codec.decode_update(buf)
+    assert dec.party_id == 0 and dec.num_examples == 10
+    assert dec.meta["num_teachers"] == 2
+    assert dec.wire_bytes() == upd.wire_bytes()
+    _tree_equal(upd.student_states, dec.student_states)
+    np.testing.assert_array_equal(upd.vote_gaps, dec.vote_gaps)
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+L2_CFG = dict(num_parties=3, num_partitions=1, num_subsets=2,
+              num_classes=2, privacy_level="L2", gamma=0.1,
+              query_fraction=0.5, seed=7)
+
+
+def test_thread_transport_matches_inprocess(data, learner):
+    """Transport smoke (tier-1): parallel parties over a thread pool are
+    bit-identical to the serial in-process round at a fixed seed."""
+    cfg = FedKTConfig(**L2_CFG)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    par = FedKTSession(learner, data, cfg, engine="loop",
+                       transport="thread", parallelism=3).run()
+    assert par.accuracy == ref.accuracy
+    assert par.epsilon == ref.epsilon
+    _tree_equal(par.student_states, ref.student_states)
+    assert par.meta["wire_bytes"] == ref.meta["wire_bytes"]
+    assert par.meta["transport"] == "thread"
+    assert par.meta["wire_bytes"]["updates"] > \
+        par.meta["wire_bytes"]["updates_payload"] > 0
+
+
+def test_subprocess_transport_matches_inprocess(data, learner):
+    """Acceptance: transport="subprocess" (one spawned interpreter per
+    party, PartyUpdate crossing as codec bytes) returns bit-identical
+    accuracy AND epsilon to the in-process loop engine."""
+    cfg = FedKTConfig(**L2_CFG)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    sub = FedKTSession(learner, data, cfg, engine="loop",
+                       transport="subprocess", parallelism=2).run()
+    assert sub.accuracy == ref.accuracy
+    assert sub.epsilon == ref.epsilon
+    _tree_equal(sub.student_states, ref.student_states)
+    assert sub.meta["wire_bytes"] == ref.meta["wire_bytes"]
+
+
+def test_transports_agree_across_engines_and_learners(data):
+    """Engine x transport grid on a tree learner: the vmap engine under
+    a parallel transport still reproduces the serial loop exactly."""
+    cfg = FedKTConfig(num_parties=2, num_partitions=2, num_subsets=2,
+                      num_classes=2, seed=3)
+    lrn = RFLearner(num_classes=2, num_trees=3, depth=2)
+    ref = FedKTSession(lrn, data, cfg, engine="loop").run()
+    par = FedKTSession(lrn, data, cfg, engine="vmap",
+                       transport="thread").run()
+    assert par.accuracy == ref.accuracy
+    _tree_equal(par.student_states, ref.student_states)
+
+
+def test_get_transport_registry():
+    assert get_transport("inprocess").name == "inprocess"
+    assert get_transport("thread", 4).parallelism == 4
+    assert get_transport("subprocess").name == "subprocess"
+    t = ThreadTransport(parallelism=2)
+    assert get_transport(t) is t
+    with pytest.raises(ValueError):
+        get_transport("carrier-pigeon")
+    with pytest.raises(ValueError):
+        get_transport(InProcessTransport(), parallelism=2)

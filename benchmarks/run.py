@@ -24,6 +24,7 @@ MODULES = [
     "table7_imbalance",
     "table10_voting",
     "engines_bench",
+    "tree_fit_bench",
     "comm_overhead",
     "roofline",
 ]

@@ -1,0 +1,174 @@
+"""Tree-fit hot-path benchmark: per-level histogram builds and
+end-to-end stacked tree fits, old scatter-add formulation vs
+``ops.tree_hist``.
+
+Two sections, written to BENCH_tree_fit.json at the repo root:
+
+  hist_levels : one (node, feature, bin[, class]) histogram build per
+      tree depth level at the quickstart rf teacher shape (a party's
+      stacked 8-subset x 16-tree grid), legacy scatter-add vs the
+      restructured ops.tree_hist auto path.  The scatter cost is flat
+      in the node count (it always walks N*F elements); the matmul
+      cost scales with live nodes, so shallow levels win hardest.
+  fits : end-to-end ``fit_forest_stacked`` / ``fit_gbdt_stacked`` warm
+      times at the same shapes the rf row of
+      BENCH_federation_engines.json exercises.
+
+Tiny-config smoke: ``bench(tiny=True, write=False)`` runs the same code
+on toy shapes in a few seconds — invoked from tier-1 tests so this
+script cannot rot.
+
+    PYTHONPATH=src python -m benchmarks.tree_fit_bench
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trees as T
+from repro.kernels import ops
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tree_fit.json")
+REPEATS = 10
+
+
+def _time(fn, *args, repeats=REPEATS):
+    jax.block_until_ready(fn(*args))           # compile
+    t0 = time.time()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / repeats
+
+
+def _hist_scatter(xb, y, w, node, n_nodes, F, num_bins, C):
+    """The pre-tree_hist per-level build: flat index + one giant 1-D
+    scatter-add over an (N, F) broadcast of w (kept for comparison)."""
+    N = xb.shape[0]
+    flat = ((node[:, None] * F + jnp.arange(F)[None]) * num_bins
+            + xb) * C + y[:, None]
+    hist = jnp.zeros((n_nodes * F * num_bins * C,), jnp.float32)
+    hist = hist.at[flat.reshape(-1)].add(
+        jnp.broadcast_to(w[:, None], (N, F)).reshape(-1))
+    return hist.reshape(n_nodes, F, num_bins, C)
+
+
+def _hist_tree_hist(xb, y, w, node, n_nodes, num_bins, C):
+    wc = jax.nn.one_hot(y, C, dtype=jnp.float32).T * w[None]
+    return ops.tree_hist(xb, node, wc, num_nodes=n_nodes,
+                         num_bins=num_bins, impl="auto")
+
+
+def bench_hist_levels(k, t, n, f, num_bins, c, depth, repeats):
+    """Per-level histogram build over the stacked (k, t) teacher grid."""
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.integers(0, num_bins, (k, n, f)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, c, (k, n)), jnp.int32)
+    w = jnp.asarray(rng.random((k, t, n)), jnp.float32)
+    rows = {}
+    for level in range(depth):
+        n_nodes = 2 ** level
+        node = jnp.asarray(rng.integers(0, n_nodes, (k, t, n)), jnp.int32)
+
+        @jax.jit
+        def scat(xb, y, w, node, n_nodes=n_nodes):
+            fn = functools.partial(_hist_scatter, n_nodes=n_nodes, F=f,
+                                   num_bins=num_bins, C=c)
+            return jax.vmap(jax.vmap(fn, (None, None, 0, 0)))(xb, y, w,
+                                                              node)
+
+        @jax.jit
+        def thist(xb, y, w, node, n_nodes=n_nodes):
+            fn = functools.partial(_hist_tree_hist, n_nodes=n_nodes,
+                                   num_bins=num_bins, C=c)
+            return jax.vmap(jax.vmap(fn, (None, None, 0, 0)))(xb, y, w,
+                                                              node)
+
+        a = np.asarray(scat(xb, y, w, node))
+        b = np.asarray(thist(xb, y, w, node).transpose(0, 1, 3, 4, 5, 2))
+        np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-5)
+        s = _time(scat, xb, y, w, node, repeats=repeats)
+        h = _time(thist, xb, y, w, node, repeats=repeats)
+        rows[f"level{level}_nodes{n_nodes}"] = {
+            "scatter_ms": round(s * 1e3, 3),
+            "tree_hist_ms": round(h * 1e3, 3),
+            "speedup": round(s / h, 2),
+        }
+    return rows
+
+
+def bench_fits(k, t, n, f, depth, rounds, repeats):
+    """End-to-end stacked fits at the federation bench shapes."""
+    rng = np.random.default_rng(1)
+    Xs = rng.normal(0, 1, (k, n, f)).astype(np.float32)
+    ys = rng.integers(0, 2, (k, n)).astype(np.int32)
+    edges = jnp.asarray(np.stack([T.make_bins(Xs[i]) for i in range(k)]))
+    Xj, yj = jnp.asarray(Xs), jnp.asarray(ys)
+    w_rf = jnp.asarray(rng.random((k, t, n)), jnp.float32)
+    fm = jnp.ones((k, t, f), jnp.float32)
+    w_gb = jnp.ones((k, n), jnp.float32)
+
+    def rf(X, e, y, w, m):
+        return T.fit_forest_stacked(X, e, y, w, m, depth=depth,
+                                    num_classes=2)
+
+    def gb(X, e, y, w):
+        return T.fit_gbdt_stacked(X, e, y, w, 0.3, num_rounds=rounds,
+                                  depth=max(depth - 2, 1))
+
+    return {
+        "rf_stacked": {
+            "shape": f"k={k} trees={t} N={n} F={f} depth={depth}",
+            "warm_ms": round(_time(rf, Xj, edges, yj, w_rf, fm,
+                                   repeats=repeats) * 1e3, 2)},
+        "gbdt_stacked": {
+            "shape": f"k={k} N={n} F={f} rounds={rounds} "
+                     f"depth={max(depth - 2, 1)}",
+            "warm_ms": round(_time(gb, Xj, edges, yj, w_gb,
+                                   repeats=repeats) * 1e3, 2)},
+    }
+
+
+def bench(tiny=False, write=True, repeats=None):
+    if tiny:      # smoke shapes: seconds, exercises every code path
+        shape = dict(k=2, t=3, n=64, f=5, num_bins=T.NUM_BINS, c=2,
+                     depth=2)
+        fit_kw = dict(k=2, t=3, n=64, f=5, depth=3, rounds=2)
+        repeats = repeats or 1
+    else:         # the quickstart rf bench teacher grid (one party)
+        shape = dict(k=8, t=16, n=128, f=14, num_bins=T.NUM_BINS, c=2,
+                     depth=5)
+        fit_kw = dict(k=8, t=16, n=128, f=14, depth=5, rounds=10)
+        repeats = repeats or REPEATS
+    rec = {
+        "impl_auto_resolves_to": ops.resolve_impl("auto"),
+        "hist_shape": shape,
+        "hist_levels": bench_hist_levels(repeats=repeats, **shape),
+        "fits": bench_fits(repeats=repeats, **fit_kw),
+    }
+    if write:
+        with open(OUT, "w") as fh:
+            json.dump(rec, fh, indent=1)
+            fh.write("\n")
+    return rec
+
+
+def run(em, quick=True):
+    """benchmarks.run entry: quick mode never overwrites the committed
+    BENCH record."""
+    rec = bench(tiny=quick, write=not quick)
+    for name, row in rec["hist_levels"].items():
+        em.emit("tree_fit", name, "scatter_ms", row["scatter_ms"])
+        em.emit("tree_fit", name, "tree_hist_ms", row["tree_hist_ms"])
+        em.emit("tree_fit", name, "speedup", row["speedup"])
+    for name, row in rec["fits"].items():
+        em.emit("tree_fit", name, "warm_ms", row["warm_ms"])
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=1))

@@ -118,9 +118,11 @@ class RFLearner:
     num_classes: int
     num_trees: int = 20
     depth: int = 6
+    impl: str = "auto"            # ops.tree_hist backend knob
 
     def _rf(self):
-        return T.RandomForest(self.num_trees, self.depth, self.num_classes)
+        return T.RandomForest(self.num_trees, self.depth, self.num_classes,
+                              impl=self.impl)
 
     def fit(self, key, X, y):
         X = np.asarray(X, np.float32)
@@ -152,7 +154,8 @@ class RFLearner:
         forest = T.fit_forest_stacked(
             jnp.stack(Xp), edges, jnp.stack(yp),
             jnp.asarray(np.stack(wp)), jnp.stack(fm),
-            depth=self.depth, num_classes=self.num_classes)
+            depth=self.depth, num_classes=self.num_classes,
+            impl=self.impl)
         return (forest, edges)
 
     def predict(self, state, X):
@@ -172,9 +175,10 @@ class GBDTLearner:
     num_classes: int = 2
     num_rounds: int = 30
     depth: int = 6
+    impl: str = "auto"            # ops.tree_hist backend knob
 
     def _gb(self):
-        return T.GBDT(self.num_rounds, self.depth)
+        return T.GBDT(self.num_rounds, self.depth, impl=self.impl)
 
     def fit(self, key, X, y):
         X = np.asarray(X, np.float32)
@@ -198,7 +202,8 @@ class GBDTLearner:
         edges = jnp.asarray(np.stack(edges))
         trees = T.fit_gbdt_stacked(
             jnp.stack(Xp), edges, jnp.stack(yp), jnp.stack(wp),
-            gb.learning_rate, num_rounds=self.num_rounds, depth=self.depth)
+            gb.learning_rate, num_rounds=self.num_rounds, depth=self.depth,
+            impl=self.impl)
         return (trees, edges)
 
     def predict(self, state, X):

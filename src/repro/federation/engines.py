@@ -20,6 +20,12 @@ never changes which key a teacher sees.  When every subset pads to the
 same pow2 bucket the two engines are bit-identical; otherwise they may
 differ in trailing pad size and are only required to agree on vote
 labels (test-enforced).
+
+Kernel-backend contract: engines never pick numeric backends.  A
+learner carries its own knobs (e.g. the tree learners' ``impl`` field
+selecting the ``ops.tree_hist`` histogram backend) and both engines
+call the same learner methods, so a backend choice can never diverge
+between the serial and batched paths.
 """
 from __future__ import annotations
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import tree_hist as _th
 from repro.kernels import vote_aggregate as _va
 from repro.kernels import wkv6 as _wk
 from repro.kernels import ref
@@ -328,6 +329,67 @@ def votes_sort(preds):
     masked = jnp.where(s == labels[None], 0, rls)
     top2 = jnp.max(masked, axis=0).astype(jnp.float32)
     return labels.astype(jnp.int32), top1, top2
+
+
+# ---------------------------------------------------------------------------
+# Tree-fit histogram
+# ---------------------------------------------------------------------------
+def tree_hist(xb, node, w, *, num_nodes, num_bins, impl="auto",
+              block_f=32):
+    """Weighted (channel, node, feature, bin) histogram — the per-level
+    build inside the histogram tree fits.
+
+    xb: (N, F) int32 binned features; node: (N,) int32 tree position of
+    each sample; w: (K, N) f32 channel weights.  Returns
+    (K, num_nodes, F, num_bins) f32 counts; rows at w == 0 contribute
+    exact zeros (the stacked-fit padding invariant).
+
+    The xla path is NOT the scatter-add this replaces: it contracts a
+    weighted (N, num_nodes*K) node/channel one-hot against per-feature-
+    block (N, bf*num_bins) bin one-hots — a dense matmul XLA lowers
+    without the serialized scatter loop or the (N, F) broadcast of w.
+    """
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _tree_hist_xla(xb, node, w, num_nodes, num_bins, block_f)
+    return _th.tree_hist(xb, node, w, num_nodes=num_nodes,
+                         num_bins=num_bins, block_f=block_f,
+                         interpret=impl == "kernel_interpret")
+
+
+def _tree_hist_xla(xb, node, w, num_nodes, num_bins, block_f):
+    N, F = xb.shape
+    K = w.shape[0]
+    nc = jax.nn.one_hot(node, num_nodes, dtype=jnp.float32)     # (N, n)
+    ncw = w.astype(jnp.float32)[:, :, None] * nc[None]          # (K, N, n)
+
+    def chunk(xc):  # (N, bf) -> (K, n, bf, B)
+        ob = jax.nn.one_hot(xc, num_bins, dtype=jnp.float32)
+        return jnp.einsum("kin,ifb->knfb", ncw, ob)
+
+    if F <= block_f:
+        return chunk(xb)
+    # feature-blocked: bounds the (N, bf, B) one-hot to one block
+    pad = (-F) % block_f
+    xp = jnp.pad(xb, ((0, 0), (0, pad))) if pad else xb
+    nf = (F + pad) // block_f
+    xs = xp.reshape(N, nf, block_f).transpose(1, 0, 2)
+    _, hs = jax.lax.scan(lambda c, xc: (c, chunk(xc)), None, xs,
+                         unroll=CONFIG["unroll"])
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(K, num_nodes, nf * block_f,
+                                            num_bins)
+    return h[:, :, :F]
+
+
+def node_hist(node, w, *, num_nodes, impl="auto"):
+    """Weighted per-node histogram — the leaf builds of the tree fits.
+
+    node: (N,) int32; w: (K, N) f32.  Returns (K, num_nodes) f32.  The
+    leaf build IS a tree_hist with the node id as the single "feature"
+    and the leaves as its bins, so both impls reuse that machinery."""
+    out = tree_hist(node[:, None], jnp.zeros_like(node), w,
+                    num_nodes=1, num_bins=num_nodes, impl=impl)
+    return out[:, 0, 0, :]
 
 
 # Convenience: per-token LM voting over a (M, B, S) prediction tensor.

@@ -107,6 +107,25 @@ def wkv6_ref(r, k, v, w, u, s0=None):
 
 
 # ---------------------------------------------------------------------------
+# Tree-fit histogram (the tree learners' per-level hot path)
+# ---------------------------------------------------------------------------
+def tree_hist_ref(xb, node, w, num_nodes, num_bins):
+    """Weighted (channel, node, feature, bin) histogram oracle.
+
+    xb: (N, F) int32 binned features; node: (N,) int32 current tree node
+    of each sample; w: (K, N) float32 channel weights (class-masked
+    sample weights for a gini tree, (g, h) for a GBDT tree).  Returns
+    (K, num_nodes, F, num_bins) float32:
+
+        hist[k, n, f, b] = sum_i w[k, i] [node_i == n] [xb[i, f] == b]
+    """
+    onehot_n = jax.nn.one_hot(node, num_nodes, dtype=jnp.float32)
+    onehot_b = jax.nn.one_hot(xb, num_bins, dtype=jnp.float32)
+    return jnp.einsum("ki,in,ifb->knfb", w.astype(jnp.float32),
+                      onehot_n, onehot_b)
+
+
+# ---------------------------------------------------------------------------
 # PATE vote aggregation (the paper's core op)
 # ---------------------------------------------------------------------------
 def vote_aggregate_ref(preds, num_classes, noise=None):

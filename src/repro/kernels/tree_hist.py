@@ -1,0 +1,97 @@
+"""Blocked (node, feature, bin) histogram Pallas kernel — the tree-fit
+hot path.
+
+Every depth level of the histogram tree learners (trees.py) needs
+
+    hist[k, n, f, b] = sum_i w[k, i] * [node_i == n] * [xb[i, f] == b]
+
+for K weight channels (the C class-masked sample weights of a gini
+tree, or the (g, h) gradient/hessian pair of a GBDT tree).  The naive
+XLA lowering is one giant 1-D scatter-add over an (N, F) broadcast of
+w — memory-bound and serialized by the scatter loop.
+
+TPU-native reformulation (the ``vote_aggregate`` pattern): the grid
+walks (feature-block, sample-block) with samples innermost.  Each step
+builds two one-hot operands on the VPU — the (bs, num_nodes) node mask
+scaled by a weight channel, and the (bs, bf * B) bin mask — and
+contracts them over the sample axis with one MXU matmul per channel,
+accumulating into the revisited output block (``pl.when`` zero-init on
+the first sample step).  Rows padded to the sample-block multiple ride
+at w == 0, so they contribute exact zeros — the same invariant the
+stacked (teacher-axis) fits rely on for padding rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xb_ref, node_ref, w_ref, out_ref, *, K, num_nodes, num_bins,
+            bs, bf):
+    i_s = pl.program_id(1)
+
+    @pl.when(i_s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    node_b = node_ref[...]                                      # (bs,)
+    n_iota = jax.lax.broadcasted_iota(jnp.int32, (bs, num_nodes), 1)
+    onehot_n = (node_b[:, None] == n_iota).astype(jnp.float32)  # (bs, n)
+
+    xb_b = xb_ref[...]                                          # (bs, bf)
+    b_iota = jax.lax.broadcasted_iota(jnp.int32, (bs, bf, num_bins), 2)
+    onehot_b = (xb_b[:, :, None] == b_iota).astype(jnp.float32)
+    onehot_b = onehot_b.reshape(bs, bf * num_bins)
+
+    w_b = w_ref[...]                                            # (bs, K)
+    contrib = []
+    for k in range(K):                       # static channel unroll
+        nck = onehot_n * w_b[:, k][:, None]                     # (bs, n)
+        contrib.append(jax.lax.dot_general(
+            nck, onehot_b, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))   # (n, bf*B) on the MXU
+    out_ref[...] += jnp.concatenate(contrib, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_nodes", "num_bins", "block_s", "block_f", "interpret"))
+def tree_hist(xb, node, w, *, num_nodes, num_bins, block_s=512,
+              block_f=None, interpret=False):
+    """xb: (N, F) int32 bins; node: (N,) int32; w: (K, N) f32 channel
+    weights.  Returns (K, num_nodes, F, num_bins) f32 weighted counts.
+    """
+    N, F = xb.shape
+    K = w.shape[0]
+    bs = min(block_s, N)
+    bf = min(block_f or F, F)
+
+    pad_s, pad_f = (-N) % bs, (-F) % bf
+    if pad_s:  # padded samples ride at w == 0: exact-zero contribution
+        xb = jnp.pad(xb, ((0, pad_s), (0, 0)))
+        node = jnp.pad(node, (0, pad_s))
+        w = jnp.pad(w, ((0, 0), (0, pad_s)))
+    if pad_f:  # junk feature columns, sliced off below
+        xb = jnp.pad(xb, ((0, 0), (0, pad_f)))
+    ns, nf = (N + pad_s) // bs, (F + pad_f) // bf
+
+    kern = functools.partial(_kernel, K=K, num_nodes=num_nodes,
+                             num_bins=num_bins, bs=bs, bf=bf)
+    out = pl.pallas_call(
+        kern,
+        grid=(nf, ns),
+        in_specs=[
+            pl.BlockSpec((bs, bf), lambda i_f, i_s: (i_s, i_f)),
+            pl.BlockSpec((bs,), lambda i_f, i_s: (i_s,)),
+            pl.BlockSpec((bs, K), lambda i_f, i_s: (i_s, 0)),
+        ],
+        out_specs=pl.BlockSpec((K * num_nodes, bf * num_bins),
+                               lambda i_f, i_s: (0, i_f)),
+        out_shape=jax.ShapeDtypeStruct(
+            (K * num_nodes, nf * bf * num_bins), jnp.float32),
+        interpret=interpret,
+    )(xb, node, w.T)
+    out = out.reshape(K, num_nodes, nf * bf, num_bins)
+    return out[:, :, :F]

@@ -4,3 +4,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too: benchmark smoke tests import the benchmarks package
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

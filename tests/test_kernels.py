@@ -170,6 +170,90 @@ def test_vote_top2_gap_clean():
     np.testing.assert_allclose(np.asarray(top2), srt[:, -2])
 
 
+def _tree_hist_scatter(xb, node, w, num_nodes, num_bins):
+    """The scatter-add formulation ops.tree_hist replaced (the old
+    trees.py per-level build): one giant 1-D scatter over an (N, F)
+    broadcast of each weight channel.  Kept here as a second oracle."""
+    N, F = xb.shape
+    flat = (node[:, None] * F + jnp.arange(F)[None]) * num_bins + xb
+
+    def one_channel(wk):
+        h = jnp.zeros((num_nodes * F * num_bins,), jnp.float32)
+        h = h.at[flat.reshape(-1)].add(
+            jnp.broadcast_to(wk[:, None], (N, F)).reshape(-1))
+        return h.reshape(num_nodes, F, num_bins)
+
+    return jnp.stack([one_channel(w[k]) for k in range(w.shape[0])])
+
+
+@pytest.mark.parametrize("N,F,n,K", [(300, 14, 8, 2), (128, 6, 1, 2),
+                                     (512, 33, 16, 3), (70, 5, 32, 1)])
+def test_tree_hist_vs_ref_and_scatter(N, F, n, K):
+    """ops.tree_hist (interpret-mode Pallas AND restructured xla) vs the
+    naive einsum oracle vs the legacy scatter-add formulation, on random
+    float weights — including zero-weight rows (the padding invariant:
+    w == 0 rows must contribute EXACT zeros, bit-identical)."""
+    B = 32
+    rng = np.random.default_rng(N + F + n + K)
+    xb = jnp.asarray(rng.integers(0, B, (N, F)), jnp.int32)
+    node = jnp.asarray(rng.integers(0, n, (N,)), jnp.int32)
+    w = jnp.asarray(rng.random((K, N)), jnp.float32)
+    w = w.at[:, -N // 4:].set(0.0)              # padding-style zero rows
+
+    h_ref = ref.tree_hist_ref(xb, node, w, n, B)
+    h_sct = _tree_hist_scatter(xb, node, w, n, B)
+    np.testing.assert_allclose(np.asarray(h_sct), np.asarray(h_ref),
+                               atol=1e-4, rtol=1e-5)
+    for impl in ("kernel_interpret", "xla"):
+        h = ops.tree_hist(xb, node, w, num_nodes=n, num_bins=B, impl=impl)
+        assert h.shape == (K, n, F, B)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   atol=1e-4, rtol=1e-5)
+        # w == 0 rows contribute EXACT zeros: scrambling their xb/node
+        # (what padding rows hold is arbitrary) is bit-identical
+        pad = N // 4
+        xb2 = xb.at[-pad:].set(
+            jnp.asarray(rng.integers(0, B, (pad, F)), jnp.int32))
+        node2 = node.at[-pad:].set(
+            jnp.asarray(rng.integers(0, n, (pad,)), jnp.int32))
+        h2 = ops.tree_hist(xb2, node2, w, num_nodes=n, num_bins=B,
+                           impl=impl)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(h2))
+
+
+def test_tree_hist_stacked_teacher_axis():
+    """vmap over the teacher axis (the stacked-fit usage): every
+    teacher's histogram equals its own unbatched build, for both the
+    interpret-mode kernel and the xla path."""
+    k, N, F, n, B = 3, 160, 7, 4, 32
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.integers(0, B, (N, F)), jnp.int32)
+    nodes = jnp.asarray(rng.integers(0, n, (k, N)), jnp.int32)
+    ws = jnp.asarray(rng.random((k, 2, N)), jnp.float32)
+    for impl in ("kernel_interpret", "xla"):
+        hv = jax.vmap(lambda nd, wk: ops.tree_hist(
+            xb, nd, wk, num_nodes=n, num_bins=B, impl=impl))(nodes, ws)
+        for i in range(k):
+            one = ops.tree_hist(xb, nodes[i], ws[i], num_nodes=n,
+                                num_bins=B, impl=impl)
+            np.testing.assert_array_equal(np.asarray(hv[i]),
+                                          np.asarray(one))
+
+
+def test_node_hist_leaf_build():
+    """ops.node_hist (the leaf build) == direct one-hot contraction."""
+    N, L, K = 200, 16, 2
+    rng = np.random.default_rng(1)
+    node = jnp.asarray(rng.integers(0, L, (N,)), jnp.int32)
+    w = jnp.asarray(rng.random((K, N)), jnp.float32)
+    expect = jnp.einsum("ki,il->kl", w,
+                        jax.nn.one_hot(node, L, dtype=jnp.float32))
+    for impl in ("kernel_interpret", "xla"):
+        got = ops.node_hist(node, w, num_nodes=L, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                                   atol=1e-4, rtol=1e-5)
+
+
 from hypothesis_compat import given, settings, st
 
 

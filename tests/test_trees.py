@@ -68,6 +68,37 @@ def test_stacked_tree_fits_bit_identical_to_serial():
             np.testing.assert_array_equal(preds[i], row)
 
 
+def test_binize_matches_broadcast_compare():
+    """searchsorted binize == the old O(N*F*B) broadcast-compare
+    sum(X >= edges), including ties ON edges and duplicate edges
+    (constant features)."""
+    rng = np.random.default_rng(7)
+    X = rng.normal(0, 1, (257, 9)).astype(np.float32)
+    X[:, -1] = 1.0                          # constant => duplicate edges
+    edges = T.make_bins(X)
+    # land some values exactly on edges to exercise the >= tie
+    X[::5, 0] = edges[0, 3]
+    X[1::7, 2] = edges[2, 30]
+    Xj, ej = jnp.asarray(X), jnp.asarray(edges)
+    old = jnp.sum(Xj[:, :, None] >= ej[None], axis=-1).astype(jnp.int32)
+    new = T.binize(Xj, ej)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+    assert np.asarray(new).min() >= 0
+    assert np.asarray(new).max() < T.NUM_BINS
+
+
+def test_tree_fit_bench_smoke():
+    """Tier-1 guard: the tree-fit benchmark runs end-to-end on its tiny
+    config (scatter-vs-tree_hist parity asserts run inside)."""
+    from benchmarks.tree_fit_bench import bench
+    rec = bench(tiny=True, write=False)
+    assert rec["hist_levels"] and rec["fits"]
+    for row in rec["hist_levels"].values():
+        assert row["tree_hist_ms"] > 0 and row["scatter_ms"] > 0
+    for row in rec["fits"].values():
+        assert row["warm_ms"] > 0
+
+
 def test_forest_feature_mask_respected():
     """Trees never split on masked features."""
     X, y = _separable()

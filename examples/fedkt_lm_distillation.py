@@ -1,17 +1,17 @@
-"""End-to-end LM driver: FedKT at language-model scale.
+"""End-to-end LM driver: FedKT at language-model scale, on the session API.
 
 Two parties each train transformer teachers on private token streams;
-per-token ensemble voting labels a public stream (the blocked
-vote_aggregate op — one collective round at datacenter scale); students
-and then the server's final model are distilled from the votes.  Uses a
-reduced phi4-family config so it runs on CPU; the same code path drives
-the full configs through launch/train.py.
+per-token ensemble voting labels a public stream (the fused label step —
+one collective round at datacenter scale); students and then the
+server's final model are distilled from the votes.  The whole round runs
+through ``FedKTSession`` with the ``lm`` engine — the same driver,
+transports, wire codec and accounting as the tabular learners — via the
+``fedkt_lm`` wrapper.  Uses a reduced phi4-family config so it runs on
+CPU; the same code path drives the full configs through launch/train.py.
 
     PYTHONPATH=src python examples/fedkt_lm_distillation.py [--steps N]
 """
 import argparse
-
-import numpy as np
 
 from repro.configs import FedKTConfig, TrainConfig, get_smoke
 from repro.data import TokenDataset, synthetic
@@ -20,6 +20,7 @@ from repro.models import Model
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--engine", choices=["lm", "loop"], default="lm")
 args = ap.parse_args()
 
 cfg = get_smoke("phi4-mini-3.8b").replace(vocab_size=512)
@@ -30,7 +31,8 @@ tcfg = TrainConfig(batch_size=8, seq_len=64, steps=args.steps,
 
 fcfg = FedKTConfig(num_parties=2, num_partitions=2, num_subsets=2,
                    num_classes=cfg.vocab_size)
-out = fedkt_lm(model, data["train"], data["public"], fcfg, tcfg)
+out = fedkt_lm(model, data["train"], data["public"], fcfg, tcfg,
+               test=data["test"], engine=args.engine)
 
 test = TokenDataset(data["test"])
 final_loss = eval_lm(model, out["final_params"], test)
@@ -39,5 +41,10 @@ final_loss = eval_lm(model, out["final_params"], test)
 solo = train_lm(model, TokenDataset(data["train"][:48]), tcfg,
                 verbose=False)
 solo_loss = eval_lm(model, solo["params"], test)
+res = out["result"]
 print(f"\nFedKT-distilled final model test loss: {final_loss:.4f}")
 print(f"single-silo baseline test loss       : {solo_loss:.4f}")
+print(f"next-token accuracy (session metric) : {res.accuracy:.4f}")
+print(f"wire: {res.meta['wire_bytes']['updates']} update bytes "
+      f"(measured framed), {res.meta['wire_bytes']['labels_framed']} "
+      f"label bytes")

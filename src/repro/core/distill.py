@@ -39,7 +39,7 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
         # gathered bf16 copy and reshard the accumulated gradient back to
         # the (FSDP) param layout once — the bf16 reduce-scatter ZeRO
         # prescribes, at 1/m the naive wire cost.
-        from repro.sharding import pregather_params
+        from repro.sharding import pregather_params as _pregather
         from repro.sharding.specs import (_ACT_MESH, _path_names,
                                           spec_for_param)
         from jax.sharding import NamedSharding
@@ -47,9 +47,8 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
         def loss_fn(pcx, mb):
             return model.loss(pcx, mb, remat=tcfg.remat)
 
-        if not tcfg.pregather:
-            def pregather_params(p, dtype):  # noqa: F811 — policy opt-out
-                return p
+        pregather_params = (_pregather if tcfg.pregather
+                            else lambda p, dtype: p)
 
         m = tcfg.microbatches
         if m <= 1:
@@ -69,24 +68,23 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
             return params, opt_state, {"loss": loss, "grad_norm": gnorm,
                                        "lr": lr}
         pc = pregather_params(params, jnp.dtype(model.cfg.dtype))
-        if True:
-            # gradient accumulation: activations scale 1/m (§Perf iter 5)
-            def split(x):
-                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
 
-            mbs = jax.tree.map(split, batch)
+        # gradient accumulation: activations scale 1/m (§Perf iter 5)
+        def split(x):
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
 
-            def acc(carry, mb):
-                l, g = jax.value_and_grad(loss_fn)(pc, mb)
-                return (carry[0] + l / m,
-                        jax.tree.map(lambda a, b: a + b / m, carry[1], g)),\
-                    None
+        mbs = jax.tree.map(split, batch)
 
-            from repro.kernels import ops as _ops
-            zero = (jnp.float32(0.0),
-                    jax.tree.map(lambda p: jnp.zeros_like(p), pc))
-            (loss, gpc), _ = jax.lax.scan(acc, zero, mbs,
-                                          unroll=_ops.CONFIG["unroll"])
+        def acc(carry, mb):
+            l, g = jax.value_and_grad(loss_fn)(pc, mb)
+            return (carry[0] + l / m,
+                    jax.tree.map(lambda a, b: a + b / m, carry[1], g)), None
+
+        from repro.kernels import ops as _ops
+        zero = (jnp.float32(0.0),
+                jax.tree.map(lambda p: jnp.zeros_like(p), pc))
+        (loss, gpc), _ = jax.lax.scan(acc, zero, mbs,
+                                      unroll=_ops.CONFIG["unroll"])
 
         # reshard grads back to the param (FSDP) layout, then promote f32
         mesh = _ACT_MESH[0]

@@ -5,9 +5,17 @@ NNLearner : jit-compiled Adam training loop over a smallnet (MLP / CNN /
             VGG).  Data is padded to power-of-two buckets so party/subset
             size variation doesn't retrigger compilation.
 RFLearner / GBDTLearner : the JAX histogram tree learners (trees.py).
+LMLearner : a full transformer-family Model behind the same contract —
+            examples are (N, S+1) token sequences, "classes" are vocab
+            ids, and a prediction is one vocab id per TOKEN (the flat
+            (N*S,) layout every vote op already uses).  Wraps the
+            sharded distill.py steps, so the federation session drives
+            LM distillation through the exact code path launch/train.py
+            and the fedkt_dryrun lower at datacenter scale.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any
@@ -215,6 +223,126 @@ class GBDTLearner:
         trees, edges = states
         return T.predict_gbdt_stacked(trees, jnp.asarray(X, np.float32),
                                       edges, self._gb().learning_rate)
+
+
+@dataclass(frozen=True, eq=False)
+class LMLearner:
+    """Language model as a FedKT learner (the paper's "any
+    classification model" claim at LM scale).
+
+    X is an (N, S+1) int32 token matrix; ``fit`` dispatches on the label
+    shape: per-sequence labels (size N — the partitioner's proxy classes)
+    mean plain next-token training, per-token labels (size N*S — a vote
+    answer) mean distillation on the given labels.  ``predict`` returns
+    one vocab id per token, flattened to (N*S,), which is exactly the
+    (t, T) layout ``teacher_vote``/``consistent_vote`` consume.
+
+    PRNG contract: LM training randomness is owned by ``tcfg.seed``
+    (init) and ``data_seed`` (the TokenDataset shuffle stream), matching
+    launch/train.py's ``train_lm`` — the federation key a fit receives
+    only feeds DP vote noise elsewhere in the protocol, so it is
+    deliberately unused here and engine/transport fan-out cannot change
+    a fit.  Construct with ``data_seed=cfg.seed`` for the student/final
+    roles (the legacy loop shuffled the public stream with the federation
+    seed) and the default 0 for teachers.
+    """
+    model: Any                    # models.Model
+    tcfg: Any                     # configs.TrainConfig
+    data_seed: int = 0            # TokenDataset shuffle seed
+
+    # jitted-step caches live in __dict__ (cached_property); drop them on
+    # pickle so Subprocess transports ship only the config fields
+    def __getstate__(self):
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def __setstate__(self, state):
+        for k, v in state.items():
+            object.__setattr__(self, k, v)
+
+    @functools.cached_property
+    def _train_machinery(self):
+        from repro.core.distill import make_train_step
+        step, opt = make_train_step(self.model, self.tcfg)
+        return jax.jit(step), opt
+
+    @functools.cached_property
+    def _predict_jit(self):
+        return jax.jit(
+            lambda p, toks: self.model.predict(p, {"tokens": toks}))
+
+    @functools.cached_property
+    def _predict_stacked_jit(self):
+        return jax.jit(jax.vmap(
+            lambda p, toks: self.model.predict(p, {"tokens": toks}),
+            in_axes=(0, None)))
+
+    @functools.cached_property
+    def _label_steps(self):
+        return {}                 # (num_members, gamma) -> jitted step
+
+    def _tokens(self, X):
+        X = np.asarray(X)
+        assert X.ndim == 2 and X.shape[1] >= 3, \
+            "LMLearner expects (N, S+1) token sequences with S >= 2"
+        return X.astype(np.int32)
+
+    def fit(self, key, X, y=None):
+        from repro.data.pipeline import TokenDataset
+        X = self._tokens(X)
+        N, S = X.shape[0], X.shape[1] - 1
+        if N < self.tcfg.batch_size:
+            raise ValueError(f"LMLearner.fit needs >= batch_size="
+                             f"{self.tcfg.batch_size} sequences, got {N}")
+        labels = None
+        if y is not None:
+            y = np.asarray(y)
+            if y.size == N * S:               # voted token labels
+                labels = y.reshape(N, S).astype(np.int32)
+            elif y.size != N:                 # size N: proxy classes
+                raise ValueError(f"labels of size {y.size} match neither "
+                                 f"{N} sequences nor {N * S} tokens")
+        step, opt = self._train_machinery
+        params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = opt.init(params)
+        ds = TokenDataset(X, self.data_seed)
+        for batch in ds.batches(self.tcfg.batch_size,
+                                steps=self.tcfg.steps, labels=labels):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, _ = step(params, opt_state, batch)
+        return params
+
+    def predict(self, state, X):
+        toks = jnp.asarray(self._tokens(X)[:, :-1])
+        return self._predict_jit(state, toks).reshape(-1)
+
+    def predict_stacked(self, bank, X):
+        """(M, N*S) predictions of M member-stacked param sets."""
+        toks = jnp.asarray(self._tokens(X)[:, :-1])
+        preds = self._predict_stacked_jit(bank, toks)
+        return preds.reshape(preds.shape[0], -1)
+
+    def label_step(self, num_members: int, gamma: float = 0.0):
+        """The raw distill.make_label_step fn over ``num_members``
+        stacked param sets — the step fedkt_dryrun lowers onto the
+        production mesh, exposed so the dry-run prices the session
+        engine's exact computation."""
+        from repro.core.distill import make_label_step
+        return make_label_step(self.model, num_members, gamma=gamma)
+
+    def vote_members(self, bank, X, *, gamma: float = 0.0, key=None):
+        """Greedy-predict + token vote over a stacked member bank in ONE
+        step (the cross-member reduction is the paper's single round at
+        scale).  Returns (labels (N*S,), clean gaps (N*S,)) — identical
+        bit-for-bit to serial per-member predicts + ``teacher_vote``
+        (test-enforced)."""
+        toks = jnp.asarray(self._tokens(X)[:, :-1])
+        m = int(jax.tree.leaves(bank)[0].shape[0])
+        ck = (m, float(gamma))
+        if ck not in self._label_steps:
+            self._label_steps[ck] = jax.jit(self.label_step(m, gamma))
+        labels, gap = self._label_steps[ck](bank, {"tokens": toks}, key)
+        return labels.reshape(-1), gap.reshape(-1)
 
 
 def accuracy(learner, state, X, y) -> float:

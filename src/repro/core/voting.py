@@ -88,11 +88,19 @@ def consistent_vote(student_preds, num_classes, *, consistent=True,
 def token_teacher_vote(preds_bts, vocab_size, *, gamma=0.0, key=None,
                        impl="auto"):
     """LM-scale party-side vote: preds (M, B, S) over a vocab-sized class
-    space.  Uses the blocked kernel path; returns (labels (B,S), gap)."""
+    space.  Uses the blocked kernel path; returns (labels (B,S), gap).
+
+    The gap is the CLEAN (pre-noise) top1 - top2, like ``teacher_vote``:
+    Lemma 7's accountant needs the noise-free margin, and the LM path
+    must feed the L2 bound the same quantity as every other mode
+    (engine-parity is test-enforced in tests/test_federation_lm.py).
+    """
     M, B, S = preds_bts.shape
+    flat = preds_bts.reshape(M, B * S)
     noise = None
     if gamma > 0.0:
         assert key is not None
         noise = laplace(key, (B * S, vocab_size), 1.0 / gamma)
-    labels, t1, t2 = ops.token_votes(preds_bts, vocab_size, noise, impl=impl)
-    return labels, (t1 - t2)
+    labels, _, c1, c2 = ops.votes_with_clean(flat, vocab_size, noise,
+                                             impl=impl)
+    return labels.reshape(B, S), (c1 - c2).reshape(B, S)

@@ -1,2 +1,4 @@
-from repro.data.pipeline import TokenDataset, party_token_datasets  # noqa: F401
+from repro.data.pipeline import (TokenDataset,  # noqa: F401
+                                 lm_session_data, party_token_datasets,
+                                 sequence_proxy_labels)
 from repro.data import synthetic  # noqa: F401

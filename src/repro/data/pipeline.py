@@ -48,6 +48,33 @@ def party_token_datasets(seqs: np.ndarray, num_parties: int, beta: float,
                          seed: int = 0) -> List[TokenDataset]:
     """Dirichlet-heterogeneous split of sequences by their dominant token
     class (a proxy label so 'label skew' is meaningful for LM data)."""
-    proxy = (seqs[:, 0] % 10).astype(np.int32)
-    parts = dirichlet_partition(proxy, num_parties, beta, seed)
+    parts = dirichlet_partition(sequence_proxy_labels(seqs), num_parties,
+                                beta, seed)
     return [TokenDataset(seqs[ix], seed + i) for i, ix in enumerate(parts)]
+
+
+def sequence_proxy_labels(seqs: np.ndarray) -> np.ndarray:
+    """Per-sequence proxy class (first token mod 10) so the Dirichlet
+    'label skew' partition is meaningful for LM data."""
+    return (seqs[:, 0] % 10).astype(np.int32)
+
+
+def lm_session_data(train: np.ndarray, public: np.ndarray,
+                    test: np.ndarray) -> Dict[str, np.ndarray]:
+    """Token splits in the FedKTSession data schema.
+
+    X_* are (N, S+1) int32 sequence matrices (an "example" is a
+    sequence); ``y_train`` carries the proxy classes the partitioner
+    skews over — the SAME proxy ``party_token_datasets`` uses, so the
+    session reproduces the legacy LM loop's party split seed-for-seed.
+    ``y_test`` is the flat next-token target stream matching
+    ``LMLearner.predict``'s (N*S,) layout, making the session's
+    ``accuracy`` metric next-token accuracy.
+    """
+    train = np.asarray(train, np.int32)
+    test = np.asarray(test, np.int32)
+    return {"X_train": train,
+            "y_train": sequence_proxy_labels(train),
+            "X_public": np.asarray(public, np.int32),
+            "X_test": test,
+            "y_test": test[:, 1:].reshape(-1)}

@@ -1,8 +1,13 @@
 """Federation API: FedKT's one-round protocol, decoupled from execution.
 
     Party / Server / FedKTSession  — the protocol (who sends what, once)
-    engines.LoopEngine / VmapEngine — how teachers train (pluggable)
-    codec                           — PartyUpdate <-> self-describing bytes
+    engines.LoopEngine / VmapEngine / LMEngine
+                                    — how teachers train and vote
+                                      (pluggable; "lm" is the sharded
+                                      distill.py path — see
+                                      docs/engines.md for the contract)
+    codec                           — PartyUpdate / TokenLabels <->
+                                      self-describing bytes
     transport.{InProcess,Thread,Subprocess}Transport
                                     — where parties run, how the ONE
                                       message crosses the silo boundary
@@ -14,11 +19,11 @@ See session.FedKTSession for the entry point; its ``transport=`` /
 worker processes with unchanged seeds.
 """
 from repro.federation import codec  # noqa: F401
-from repro.federation.engines import (Engine, LoopEngine,  # noqa: F401
-                                      VmapEngine, get_engine)
+from repro.federation.engines import (Engine, LMEngine,  # noqa: F401
+                                      LoopEngine, VmapEngine, get_engine)
 from repro.federation.messages import (PartyUpdate,  # noqa: F401
-                                       RoundResult, label_wire_bytes,
-                                       pytree_bytes)
+                                       RoundResult, TokenLabels,
+                                       label_wire_bytes, pytree_bytes)
 from repro.federation.party import Party  # noqa: F401
 from repro.federation.server import Server  # noqa: F401
 from repro.federation.session import FedKTSession, query_budget  # noqa: F401

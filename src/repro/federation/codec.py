@@ -30,7 +30,8 @@ from typing import Any, Dict, List, Tuple
 import numpy as np
 
 from repro.checkpoint.checkpoint import _SEP, flatten_tree
-from repro.federation.messages import PartyUpdate
+from repro.federation.messages import (PartyUpdate, TokenLabels,
+                                       label_wire_bytes)
 
 MAGIC = b"FKT1"
 _LEN = struct.Struct("<I")
@@ -174,5 +175,63 @@ def decode_update(buf: bytes) -> PartyUpdate:
 
 
 def update_encoded_nbytes(update: PartyUpdate) -> int:
-    """Measured wire size of one PartyUpdate (header + payload)."""
+    """Measured wire size of one PartyUpdate (header + payload).
+    Works abstractly too: build the update over ShapeDtypeStructs and
+    full-size LM updates price without materializing a parameter."""
     return encoded_nbytes(_update_tree(update), _update_extra(update))
+
+
+# ---------------------------------------------------------------------------
+# TokenLabels framing (the vote-answer message kind)
+# ---------------------------------------------------------------------------
+def _labels_extra(msg: TokenLabels) -> Dict[str, Any]:
+    return {"kind": "TokenLabels", "party_id": int(msg.party_id),
+            "meta": dict(msg.meta)}
+
+
+def encode_labels(msg: TokenLabels) -> bytes:
+    """The vote-answer message: voted int32 labels ((T,) classes or
+    (B, S) tokens) in the payload, scalar fields in the header."""
+    return encode({"labels": msg.labels}, _labels_extra(msg))
+
+
+def decode_labels(buf: bytes) -> TokenLabels:
+    tree, header = decode(buf)
+    if header.get("kind") != "TokenLabels":
+        raise ValueError(f"expected a TokenLabels message, "
+                         f"got kind={header.get('kind')!r}")
+    return TokenLabels(party_id=header["party_id"], labels=tree["labels"],
+                       meta=dict(header["meta"]))
+
+
+def labels_encoded_nbytes(msg: TokenLabels) -> int:
+    """Measured wire size of one TokenLabels message (header + payload);
+    abstract-capable like ``update_encoded_nbytes``."""
+    return encoded_nbytes({"labels": msg.labels}, _labels_extra(msg))
+
+
+def lm_protocol_bytes(member_state, num_members: int, batch: int,
+                      seq: int) -> Dict[str, int]:
+    """Priced wire cost of the LM-scale one round, per member: its
+    PartyUpdate-framed state upload (once) and the TokenLabels answer
+    for a (batch, seq) public block.  ``member_state`` may be a
+    ``jax.eval_shape`` tree — every number is the codec's exact framed
+    size (header included), so what fedkt_dryrun records equals
+    ``len(encode_*(...))`` of the real message bit-for-bit
+    (test-enforced in tests/test_federation_lm.py)."""
+    import jax
+
+    upd = PartyUpdate(
+        party_id=0, student_states=[member_state],
+        vote_gaps=jax.ShapeDtypeStruct((batch * seq,), np.float32),
+        num_examples=0, meta={"num_teachers": num_members})
+    lbl = TokenLabels(
+        party_id=0,
+        labels=jax.ShapeDtypeStruct((batch, seq), np.int32))
+    return {
+        "members": num_members,
+        "update_bytes_per_member": update_encoded_nbytes(upd),
+        "update_payload_bytes_per_member": upd.wire_bytes(),
+        "label_bytes": labels_encoded_nbytes(lbl),
+        "label_payload_bytes": label_wire_bytes(batch * seq),
+    }

@@ -7,14 +7,24 @@ The one-shot protocol exchanges exactly one message kind per direction:
                 Never raw data, never teacher states — this is the
                 paper's privacy boundary and its communication bound
                 (n * s models on the wire, total).
+  TokenLabels : the vote ANSWER as a message.  In the in-process modes
+                labels never leave the silo, but at datacenter scale
+                (launch/fedkt_dryrun.py) the ensemble members are
+                sharded across hosts and the voted labels — one int32
+                per query unit: per example for tabular learners, per
+                TOKEN for the LM path — do cross the fabric, O(T)
+                integers regardless of vocab or member count.  Framing
+                it like every other message lets the dry-run price it
+                with the codec's MEASURED framed bytes instead of a raw
+                payload estimate.
   RoundResult : server -> caller.  Final model, accounting, metrics.
 
-These stay plain dataclasses over pytrees; HOW a PartyUpdate crosses
-the silo boundary is a transport concern (federation/transport.py) and
-its byte form is the wire codec's (federation/codec.py) — every
-transport serializes the update, so ``meta["encoded_bytes"]`` on a
-received update is its measured wire size, and ``pytree_bytes`` here
-remains the raw-array accounting the codec's payload matches exactly.
+These stay plain dataclasses over pytrees; HOW a message crosses the
+silo boundary is a transport concern (federation/transport.py) and its
+byte form is the wire codec's (federation/codec.py) — every transport
+serializes the update, so ``meta["encoded_bytes"]`` on a received
+update is its measured wire size, and ``pytree_bytes`` here remains
+the raw-array accounting the codec's payload matches exactly.
 """
 from __future__ import annotations
 
@@ -62,6 +72,26 @@ class PartyUpdate:
         codec's measured payload exactly; the codec's framed size adds
         only the header (cross-checked in tests/test_transport.py)."""
         return pytree_bytes(self.student_states) + pytree_bytes(self.vote_gaps)
+
+
+@dataclass
+class TokenLabels:
+    """One partition-ensemble's voted labels for the public queries.
+
+    ``labels`` is int32, any shape — (T,) class labels for the tabular
+    learners, (B, S) token labels on the LM path; the codec frames both
+    identically (federation/codec.py encode_labels/decode_labels).
+    Works with concrete arrays and with ShapeDtypeStructs, so the
+    dry-run prices full-size label messages abstractly.
+    """
+    party_id: int
+    labels: Any                        # int32 voted labels
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def wire_bytes(self) -> int:
+        """Raw label payload bytes; the codec's framed size adds only
+        the header (cross-checked in tests/test_federation_lm.py)."""
+        return pytree_bytes(self.labels)
 
 
 @dataclass

@@ -16,9 +16,8 @@ import numpy as np
 
 from repro.configs.base import FedKTConfig
 from repro.core.partition import subsets_of_partition
-from repro.core.voting import teacher_vote
 from repro.federation.engines import Engine
-from repro.federation.messages import PartyUpdate
+from repro.federation.messages import LABEL_BYTES, PartyUpdate
 
 
 @dataclass
@@ -87,10 +86,14 @@ class Party:
         gaps: List[np.ndarray] = []
         for j in range(s):
             bank_j = engine.slice_bank(bank, j * t, (j + 1) * t)
-            preds = engine.predict_teachers(self.learner, bank_j, Xq)
-            vote = teacher_vote(preds, u, gamma=gamma, key=vote_keys[j])
-            gaps.append(np.asarray(vote.top_gap))
-            labelsets.append(np.asarray(vote.labels))
+            # HOW the queries get labeled is the engine's concern
+            # (serial predicts + histogram vote, or the LM path's fused
+            # label step); the protocol only needs labels + clean gaps
+            labels, gap = engine.label_queries(
+                self.learner, bank_j, Xq, u, gamma=gamma,
+                key=vote_keys[j])
+            gaps.append(np.asarray(gap))
+            labelsets.append(np.asarray(labels))
         # all s students vote on the same Xq, so the engine may train
         # them as ONE stacked fit; student_keys is the precomputed legacy
         # schedule, so batching never changes a student's seed
@@ -101,5 +104,13 @@ class Party:
                              student_states=students,
                              vote_gaps=np.concatenate(gaps),
                              num_examples=self.num_examples,
-                             meta={"num_teachers": s * t})
+                             meta={"num_teachers": s * t,
+                                   # label answers are one vote unit per
+                                   # LABEL (= per token on the LM path,
+                                   # not per query sequence) — the
+                                   # session's wire accounting reads this
+                                   "num_query_labels": int(
+                                       labelsets[0].size),
+                                   "label_payload_bytes": int(
+                                       labelsets[0].size * LABEL_BYTES)})
         return update, key

@@ -33,9 +33,10 @@ import numpy as np
 from repro.configs.base import FedKTConfig
 from repro.core.learners import accuracy
 from repro.core.partition import dirichlet_partition
+from repro.federation import codec
 from repro.federation.engines import get_engine
-from repro.federation.messages import (PartyUpdate, RoundResult,
-                                       label_wire_bytes)
+from repro.federation.messages import (LABEL_BYTES, PartyUpdate,
+                                       RoundResult, TokenLabels)
 from repro.federation.party import Party
 from repro.federation.server import Server
 from repro.federation.transport import get_transport
@@ -139,7 +140,17 @@ class FedKTSession:
                 # accounted: raw array payload (students + gap trace)
                 "updates_payload": int(sum(u.wire_bytes()
                                            for u in updates)),
-                "labels": label_wire_bytes(self.tq_party) * len(updates),
+                # label answer, one per party: raw payload (one int32
+                # per vote unit — per example for tabular learners, per
+                # TOKEN on the LM path) and its codec-framed size
+                "labels": int(sum(u.meta["num_query_labels"]
+                                  for u in updates)) * LABEL_BYTES,
+                "labels_framed": int(sum(
+                    codec.labels_encoded_nbytes(TokenLabels(
+                        party_id=u.party_id,
+                        labels=jax.ShapeDtypeStruct(
+                            (u.meta["num_query_labels"],), np.int32)))
+                    for u in updates)),
             },
         }
         return RoundResult(final_state=final_state, accuracy=acc,

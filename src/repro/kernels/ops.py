@@ -390,13 +390,3 @@ def node_hist(node, w, *, num_nodes, impl="auto"):
     out = tree_hist(node[:, None], jnp.zeros_like(node), w,
                     num_nodes=1, num_bins=num_nodes, impl=impl)
     return out[:, 0, 0, :]
-
-
-# Convenience: per-token LM voting over a (M, B, S) prediction tensor.
-def token_votes(preds_bts, vocab_size, noise=None, *, impl="auto"):
-    """preds_bts: (M, B, S) int32 -> (labels (B,S), top1 (B,S), top2 (B,S))"""
-    M, B, S = preds_bts.shape
-    flat = preds_bts.reshape(M, B * S)
-    nz = None if noise is None else noise.reshape(B * S, -1)
-    labels, t1, t2 = votes(flat, vocab_size, nz, impl=impl)
-    return labels.reshape(B, S), t1.reshape(B, S), t2.reshape(B, S)

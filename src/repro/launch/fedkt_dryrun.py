@@ -11,11 +11,13 @@ vocabulary-free sort-mode vote.  The cross-member vote reduction is the
 paper's "one round": we count the collectives in the lowered HLO to show
 the label exchange costs O(T) integers, NOT O(T * vocab) or O(M * params).
 
-This is the LM-scale execution of the same protocol that
-``repro.federation`` drives for in-process learners: one stacked member
-here == one ``PartyUpdate`` student state there, and the recorded
-"protocol" section prices both message kinds with
-``repro.federation.messages`` so the two paths stay comparable.
+This is the LM-scale execution of the SAME protocol ``repro.federation``
+drives: the lowered step is ``LMLearner.label_step`` — the exact
+function the session's ``lm`` engine dispatches per partition — so the
+dry-run prices the session's computation, not a parallel hand-rolled
+one.  The recorded "protocol" section prices both message kinds
+(PartyUpdate up, TokenLabels down) as the wire codec's MEASURED framed
+bytes via ``codec.lm_protocol_bytes``.
 
   PYTHONPATH=src python -m repro.launch.fedkt_dryrun [--arch ...] [--members 16]
 """
@@ -25,10 +27,9 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config
-from repro.core.distill import make_label_step
+from repro.configs import ARCH_IDS, TrainConfig, get_config
+from repro.core.learners import LMLearner
 from repro.federation import codec
-from repro.federation.messages import label_wire_bytes, pytree_bytes
 from repro.launch import analysis
 from repro.launch.dryrun import effective_periods, probe_cfg
 from repro.launch.mesh import make_production_mesh
@@ -59,7 +60,9 @@ def lower_label_step(arch, members, B, S, mesh, cfg=None):
     tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
     tshard = NamedSharding(mesh, P())
 
-    step = make_label_step(model, members)
+    # the session engine's exact per-partition step (LMEngine dispatches
+    # this same fn jitted without shardings; here it gets the mesh)
+    step = LMLearner(model, TrainConfig()).label_step(members)
     jitted = jax.jit(lambda mp, t: step(mp, {"tokens": t}),
                      in_shardings=(pshard, tshard))
     return jitted.lower(stacked, tokens).compile(), cfg
@@ -104,20 +107,17 @@ def main():
                                 effective_periods(cfg))
     rec = roof.to_dict()
     rec["members"] = args.members
-    # the one-round protocol cost, priced like a federation PartyUpdate:
-    # each member ships its student state once; vote labels come back as
+    # the one-round protocol cost, priced as the federation messages:
+    # each member ships its state ONCE as a PartyUpdate (student state +
+    # gap trace); vote labels come back as one TokenLabels message of
     # O(T) integers regardless of vocab or member count.  Sizes are the
     # wire codec's exact framed bytes (header included), computed from
-    # eval_shape without materializing the member — not a raw-array
-    # estimate.
+    # eval_shape without materializing the member — byte-equal to
+    # len(encode_*()) of the real messages (test-enforced).
     one_member = jax.eval_shape(lambda: Model(cfg).init(
         jax.random.PRNGKey(0)))
-    rec["protocol"] = {
-        "members": args.members,
-        "update_bytes_per_member": codec.encoded_nbytes(one_member),
-        "update_payload_bytes_per_member": pytree_bytes(one_member),
-        "label_bytes": label_wire_bytes(args.batch * args.seq),
-    }
+    rec["protocol"] = codec.lm_protocol_bytes(
+        one_member, args.members, args.batch, args.seq)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1, default=str)

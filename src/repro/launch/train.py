@@ -24,9 +24,8 @@ import numpy as np
 
 from repro.configs import (ARCH_IDS, FedKTConfig, TrainConfig, get_config,
                            get_smoke)
-from repro.core.distill import make_label_step, make_train_step
-from repro.core.voting import consistent_vote
-from repro.data import TokenDataset, party_token_datasets, synthetic
+from repro.core.distill import make_train_step
+from repro.data import TokenDataset, synthetic
 from repro.models import Model
 from repro import checkpoint
 
@@ -72,58 +71,53 @@ def eval_lm(model: Model, params, dataset: TokenDataset, batch_size=8,
 
 
 def fedkt_lm(model: Model, seqs: np.ndarray, public: np.ndarray,
-             fcfg: FedKTConfig, tcfg: TrainConfig, *, verbose=True
-             ) -> Dict[str, Any]:
-    """LM-scale FedKT: per-token voting distillation (DESIGN.md §3)."""
-    n, s, t = fcfg.num_parties, fcfg.num_partitions, fcfg.num_subsets
-    parties = party_token_datasets(seqs, n, fcfg.beta, fcfg.seed)
-    pub = TokenDataset(public, fcfg.seed)
-    pub_tokens = jnp.asarray(public[:, :-1])
-    key = jax.random.PRNGKey(fcfg.seed)
+             fcfg: FedKTConfig, tcfg: TrainConfig, *, test=None,
+             engine: str = "lm", transport="inprocess", parallelism=None,
+             verbose=True) -> Dict[str, Any]:
+    """LM-scale FedKT: per-token voting distillation (DESIGN.md §3),
+    driven by the SAME session stack as every other learner.
 
-    all_students = []
-    for i, pds in enumerate(parties):
-        students_i = []
-        for j in range(s):
-            # teachers: t disjoint slices of the party's sequences
-            subs = np.array_split(
-                np.random.default_rng(fcfg.seed + i * 31 + j).permutation(
-                    len(pds.seqs)), t)
-            tp = []
-            for sub in subs:
-                r = train_lm(model, TokenDataset(pds.seqs[sub]), tcfg,
-                             verbose=False)
-                tp.append(r["params"])
-            member_params = jax.tree.map(lambda *xs: jnp.stack(xs), *tp)
-            label_step = jax.jit(make_label_step(
-                model, t, gamma=fcfg.gamma
-                if fcfg.privacy_level == "L2" else 0.0))
-            key, kk = jax.random.split(key)
-            labels, gap = label_step(member_params,
-                                     {"tokens": pub_tokens}, kk)
-            r = train_lm(model, pub, tcfg, labels=np.asarray(labels),
-                         verbose=False)
-            students_i.append(r["params"])
-            if verbose:
-                print(f"party {i} partition {j}: student distilled "
-                      f"(mean vote gap {float(gap.mean()):.2f})")
-        all_students.append(students_i)
+    The hand-rolled loop this function used to be is gone: an
+    ``LMLearner`` wraps the distill.py label/train steps behind the
+    Learner contract and ``FedKTSession`` runs the protocol — party
+    split, subset plan, key schedule, wire codec and privacy accounting
+    are the one session driver's (engine="lm" fuses each partition's
+    predict+vote into the blocked label step; engine="loop" is the
+    serial reference, bit-identical — test-enforced in
+    tests/test_federation_lm.py).  ``test`` supplies held-out sequences
+    for the session's next-token-accuracy metric (defaults to the
+    public block).
 
-    # server: consistent voting over students
-    preds = jnp.stack([
-        jnp.stack([model.predict(sp, {"tokens": pub_tokens})
-                   for sp in si]) for si in all_students])  # (n,s,B,S)
-    nn, ss, B, S = preds.shape
-    key, kk = jax.random.split(key)
-    vote = consistent_vote(
-        preds.reshape(nn, ss, B * S), model.cfg.vocab_size,
-        consistent=fcfg.consistent_voting,
-        gamma=fcfg.gamma if fcfg.privacy_level == "L1" else 0.0, key=kk)
-    final = train_lm(model, pub, tcfg,
-                     labels=np.asarray(vote.labels).reshape(B, S),
-                     verbose=False)
-    return {"final_params": final["params"], "students": all_students,
-            "vote": vote}
+    NOTE: exact pre-PR-5 numbers at a fixed seed are NOT preserved.
+    The old loop drew teacher subsets with its own ad-hoc scheme
+    (per-partition full permutations, seed + i*31 + j) and shuffled all
+    student/final fits from ONE shared TokenDataset rng; the session
+    uses the protocol's canonical ``subsets_of_partition`` plan
+    (seed + 17*party_id, Algorithm 1 line 2) and a fresh per-fit
+    shuffle stream — same distribution, reproducible per fit, and
+    identical across engines/transports.
+    """
+    from repro.core.learners import LMLearner
+    from repro.data.pipeline import lm_session_data
+    from repro.federation import FedKTSession
+
+    teacher = LMLearner(model, tcfg)
+    # students and the final model distill on the public stream, which
+    # the legacy loop shuffled with the federation seed
+    distiller = LMLearner(model, tcfg, data_seed=fcfg.seed)
+    data = lm_session_data(seqs, public,
+                           public if test is None else test)
+    session = FedKTSession(teacher, data, fcfg,
+                           student_learner=distiller,
+                           final_learner=distiller, engine=engine,
+                           transport=transport, parallelism=parallelism)
+    res = session.run(verbose=verbose)
+    if verbose:
+        print(f"fedkt-lm [{res.meta['engine']}]: next-token acc "
+              f"{res.accuracy:.4f}, "
+              f"{res.meta['wire_bytes']['updates']} update wire bytes")
+    return {"final_params": res.final_state,
+            "students": res.student_states, "result": res}
 
 
 def main():
@@ -151,7 +145,8 @@ def main():
     if args.fedkt:
         fcfg = FedKTConfig(num_parties=args.parties, num_partitions=2,
                            num_subsets=2, num_classes=cfg.vocab_size)
-        out = fedkt_lm(model, data["train"], data["public"], fcfg, tcfg)
+        out = fedkt_lm(model, data["train"], data["public"], fcfg, tcfg,
+                       test=data["test"])
         params = out["final_params"]
     else:
         out = train_lm(model, TokenDataset(data["train"]), tcfg)

@@ -6,3 +6,64 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # repo root too: benchmark smoke tests import the benchmarks package
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Shared LM model/config helpers (test_distill_lm, test_archs,
+# test_federation_lm) — one place for the tiny-transformer setup the LM
+# tests kept rebuilding.
+# ---------------------------------------------------------------------------
+
+
+def tiny_lm_config(**overrides):
+    """The smallest runnable decoder config: float32 for determinism,
+    one attention layer, 64-token vocab.  Fast enough for tier-1
+    parity runs (full-size variants use ``smoke_model`` instead)."""
+    from repro.configs.base import ModelConfig
+    kw = dict(name="tiny-lm", num_layers=1, d_model=32, num_heads=2,
+              num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+              param_dtype="float32")
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_model(arch, **overrides):
+    """(cfg, Model) for a registry arch's reduced SMOKE variant, with
+    optional config overrides (vocab_size=..., dtype=..., ...)."""
+    from repro.configs import get_smoke
+    from repro.models import Model
+    cfg = get_smoke(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg, Model(cfg)
+
+
+def lm_batch(cfg, B=2, S=32, seed=0):
+    """Random {tokens, labels} batch for ``cfg`` (plus the encoder-frame /
+    VLM-embed extras the multimodal archs expect)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.is_encoder_decoder:
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    elif cfg.frontend_embeds:
+        b["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.frontend_embeds, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return b
+
+
+@pytest.fixture(scope="session")
+def tiny_lm():
+    """Shared tiny transformer: (cfg, Model) — session-scoped so every
+    LM test reuses one jit cache."""
+    from repro.models import Model
+    cfg = tiny_lm_config()
+    return cfg, Model(cfg)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import lm_batch as _batch
 from repro.configs import ARCH_IDS, TrainConfig, get_smoke
 from repro.configs.base import MoEConfig
 from repro.core.distill import make_train_step
@@ -17,23 +18,6 @@ from repro.models import Model
 # 10 architectures x (forward + train + decode): the single largest
 # CPU cost in the suite — scheduled full run only
 pytestmark = pytest.mark.slow
-
-
-def _batch(cfg, B=2, S=32, seed=0):
-    rng = np.random.default_rng(seed)
-    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
-                               jnp.int32),
-         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
-                               jnp.int32)}
-    if cfg.is_encoder_decoder:
-        b["frames"] = jnp.asarray(
-            rng.normal(0, 1, (B, cfg.encoder_seq_len, cfg.d_model)),
-            jnp.dtype(cfg.dtype))
-    elif cfg.frontend_embeds:
-        b["embeds"] = jnp.asarray(
-            rng.normal(0, 1, (B, cfg.frontend_embeds, cfg.d_model)),
-            jnp.dtype(cfg.dtype))
-    return b
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

@@ -4,21 +4,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import TrainConfig, get_smoke
+from conftest import lm_batch, smoke_model
+from repro.configs import TrainConfig
 from repro.core.distill import (make_decode_step, make_label_step,
                                 make_prefill_step, make_train_step)
-from repro.models import Model
 
 
 def test_label_step_votes_match_individual_predicts():
-    cfg = get_smoke("stablelm-3b")
-    model = Model(cfg)
+    cfg, model = smoke_model("stablelm-3b")
     keys = jax.random.split(jax.random.PRNGKey(0), 3)
     members = [model.init(k) for k in keys]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *members)
-    batch = {"tokens": jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16)),
-        jnp.int32)}
+    batch = {"tokens": lm_batch(cfg, 2, 16)["tokens"]}
     label_step = jax.jit(make_label_step(model, 3))
     labels, gap = label_step(stacked, batch)
     # oracle: per-member predict + majority
@@ -35,10 +32,8 @@ def test_label_step_votes_match_individual_predicts():
 @pytest.mark.slow
 def test_distillation_learns_teacher_labels():
     """A student trained on voted labels fits them (distillation works)."""
-    cfg = get_smoke("phi4-mini-3.8b").replace(vocab_size=64)
-    model = Model(cfg)
-    rng = np.random.default_rng(0)
-    tokens = jnp.asarray(rng.integers(0, 64, (8, 32)), jnp.int32)
+    cfg, model = smoke_model("phi4-mini-3.8b", vocab_size=64)
+    tokens = lm_batch(cfg, 8, 32)["tokens"]
     labels = jnp.asarray((np.asarray(tokens) * 7 + 1) % 64, jnp.int32)
     tcfg = TrainConfig(batch_size=8, seq_len=32, steps=150,
                        learning_rate=3e-3)
@@ -58,16 +53,13 @@ def test_distillation_learns_teacher_labels():
 
 
 def test_prefill_then_decode_greedy_continuation():
-    cfg = get_smoke("granite-20b").replace(dtype="float32",
-                                           param_dtype="float32")
-    model = Model(cfg)
+    cfg, model = smoke_model("granite-20b", dtype="float32",
+                             param_dtype="float32")
     params = model.init(jax.random.PRNGKey(0))
     prefill = jax.jit(make_prefill_step(model))
     decode = jax.jit(make_decode_step(model))
     B, P = 2, 12
-    toks = jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size, (B, P)),
-        jnp.int32)
+    toks = lm_batch(cfg, B, P)["tokens"]
     logits, cache = prefill(params, {"tokens": toks})
     cache = jax.tree.map(
         lambda x: jnp.pad(x, [(0, 0), (0, 4)] + [(0, 0)] * (x.ndim - 2))

@@ -1,0 +1,367 @@
+"""Sharded LM students through the session driver, locked down by
+parity: FedKTSession + LMLearner must reproduce a direct transcription
+of the distill.py loop (Algorithm 1 on make_label_step/make_train_step)
+seed-for-seed — labels, gaps, student/final states and final loss — in
+BOTH the serial ``loop`` engine and the fused ``lm`` engine.  Plus the
+wire side: codec round-trip property tests for LM-shaped messages and
+framed-bytes parity for the dry-run's protocol pricing.
+
+The reference here is the CANONICAL direct loop (the protocol's
+``subsets_of_partition`` plan, per-fit shuffle streams, the session's
+key schedule) — deliberately NOT the deleted ``fedkt_lm``'s ad-hoc
+subset scheme and shared-rng batch stream, whose exact numbers are not
+preserved (see the ``fedkt_lm`` docstring in launch/train.py)."""
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_model, tiny_lm_config
+from hypothesis_compat import given, settings, st
+from repro.configs.base import FedKTConfig, TrainConfig
+from repro.core.distill import make_label_step, make_train_step
+from repro.core.partition import dirichlet_partition, subsets_of_partition
+from repro.core.learners import LMLearner
+from repro.core.voting import consistent_vote
+from repro.data import TokenDataset, lm_session_data, synthetic
+from repro.federation import (FedKTSession, LMEngine, PartyUpdate,
+                              TokenLabels, codec, get_engine,
+                              query_budget)
+from repro.federation.party import Party
+from repro.models import Model
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# The legacy direct loop: Algorithm 1 transcribed onto the raw
+# distill.py steps.  This is the reference the session must reproduce.
+# ---------------------------------------------------------------------------
+def _direct_fedkt_lm(model, tcfg, fcfg, train, public):
+    """Hand-rolled LM FedKT on make_label_step/make_train_step with the
+    canonical partition plan and the serial key schedule."""
+    step, opt = make_train_step(model, tcfg)
+    step = jax.jit(step)
+
+    def fit(seqs, data_seed, labels=None):
+        params = model.init(jax.random.PRNGKey(tcfg.seed))
+        opt_state = opt.init(params)
+        for batch in TokenDataset(seqs, data_seed).batches(
+                tcfg.batch_size, steps=tcfg.steps, labels=labels):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, _ = step(params, opt_state, batch)
+        return params
+
+    s, t = fcfg.num_partitions, fcfg.num_subsets
+    proxy = (train[:, 0] % 10).astype(np.int32)
+    parts = dirichlet_partition(proxy, fcfg.num_parties, fcfg.beta,
+                                fcfg.seed)
+    tq_party, tq_server = query_budget(fcfg, len(public))
+    Xq = public[:tq_party]
+    toks_q = jnp.asarray(Xq[:, :-1])
+    gamma_p = fcfg.gamma if fcfg.privacy_level == "L2" else 0.0
+    label_step = jax.jit(make_label_step(model, t, gamma=gamma_p))
+
+    key = jax.random.PRNGKey(fcfg.seed)
+    students, labelsets, gaps = [], [], []
+    for i, ix in enumerate(parts):
+        plan = subsets_of_partition(ix, s, t, seed=fcfg.seed + 17 * i)
+        students_i, gaps_i = [], []
+        for j in range(s):
+            for _ in range(t):                     # teacher keys (the LM
+                key, _ = jax.random.split(key)     # fits seed from tcfg)
+            key, vote_key = jax.random.split(key)
+            key, _ = jax.random.split(key)         # student key (unused)
+            members = [fit(train[sub], 0) for sub in plan[j]]
+            bank = jax.tree.map(lambda *xs: jnp.stack(xs), *members)
+            labels, gap = label_step(bank, {"tokens": toks_q}, vote_key)
+            students_i.append(fit(Xq, fcfg.seed,
+                                  labels=np.asarray(labels)))
+            labelsets.append(np.asarray(labels).reshape(-1))
+            gaps_i.append(np.asarray(gap).reshape(-1))
+        students.append(students_i)
+        gaps.append(np.concatenate(gaps_i))
+
+    Xq_srv = public[:tq_server]
+    toks_srv = jnp.asarray(Xq_srv[:, :-1])
+    preds = jnp.stack([
+        jnp.stack([model.predict(sp, {"tokens": toks_srv}).reshape(-1)
+                   for sp in si]) for si in students])       # (n, s, T)
+    key, kk = jax.random.split(key)
+    vote = consistent_vote(
+        preds, fcfg.num_classes, consistent=fcfg.consistent_voting,
+        gamma=fcfg.gamma if fcfg.privacy_level == "L1" else 0.0, key=kk)
+    key, _ = jax.random.split(key)                 # final-fit key (unused)
+    final = fit(Xq_srv, fcfg.seed,
+                labels=np.asarray(vote.labels).reshape(len(Xq_srv), -1))
+    return {"students": students, "final": final, "gaps": gaps,
+            "labels": labelsets}
+
+
+FCFG = dict(num_parties=2, num_partitions=2, num_subsets=2,
+            num_classes=64, beta=100.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def lm_setup(tiny_lm):
+    cfg, model = tiny_lm
+    tcfg = TrainConfig(batch_size=4, seq_len=16, steps=4,
+                       learning_rate=3e-3)
+    data = synthetic.tokens(n_seqs=64, seq_len=17, vocab=cfg.vocab_size,
+                            seed=0)
+    return {"cfg": cfg, "model": model, "tcfg": tcfg, "tokens": data,
+            "teacher": LMLearner(model, tcfg),
+            "student": LMLearner(model, tcfg, data_seed=FCFG["seed"])}
+
+
+@pytest.fixture(scope="module")
+def direct_reference(lm_setup):
+    fcfg = FedKTConfig(**FCFG)
+    return _direct_fedkt_lm(lm_setup["model"], lm_setup["tcfg"], fcfg,
+                            lm_setup["tokens"]["train"],
+                            lm_setup["tokens"]["public"])
+
+
+def _run_session(lm_setup, fcfg, engine, **kw):
+    d = lm_setup["tokens"]
+    data = lm_session_data(d["train"], d["public"], d["test"])
+    return FedKTSession(lm_setup["teacher"], data, fcfg,
+                        student_learner=lm_setup["student"],
+                        final_learner=lm_setup["student"], engine=engine,
+                        **kw).run()
+
+
+# ---------------------------------------------------------------------------
+# Parity: session == direct loop, loop and lm engines
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["loop", "lm"])
+def test_session_lm_matches_direct_loop(lm_setup, direct_reference,
+                                        engine):
+    """THE acceptance test: FedKTSession drives LM distillation
+    end-to-end and its states are bit-identical to the hand-rolled
+    distill.py loop, under both the serial and the fused-label-step
+    engines."""
+    res = _run_session(lm_setup, FedKTConfig(**FCFG), engine)
+    _tree_equal(res.student_states, direct_reference["students"])
+    _tree_equal(res.final_state, direct_reference["final"])
+    assert res.epsilon is None                       # L0
+    assert 0.0 <= res.accuracy <= 1.0
+
+
+@pytest.mark.parametrize("engine", ["loop", "lm"])
+def test_party_lm_labels_and_gaps_match_direct(lm_setup,
+                                               direct_reference, engine):
+    """Party-level: the PartyUpdate's vote-gap trace and the voted
+    labels match the direct loop exactly (party 0, both engines)."""
+    d, fcfg = lm_setup["tokens"], FedKTConfig(**FCFG)
+    data = lm_session_data(d["train"], d["public"], d["test"])
+    parts = dirichlet_partition(data["y_train"], fcfg.num_parties,
+                                fcfg.beta, fcfg.seed)
+    party = Party(party_id=0, X=data["X_train"], y=data["y_train"],
+                  indices=parts[0], cfg=fcfg, learner=lm_setup["teacher"],
+                  student_learner=lm_setup["student"])
+    upd, _ = party.local_round(jax.random.PRNGKey(fcfg.seed),
+                               data["X_public"], len(data["X_public"]),
+                               get_engine(engine))
+    np.testing.assert_array_equal(upd.vote_gaps,
+                                  direct_reference["gaps"][0])
+    _tree_equal(upd.student_states, direct_reference["students"][0])
+    T = (d["public"].shape[1] - 1) * len(d["public"])
+    assert upd.meta["num_query_labels"] == T
+    assert upd.meta["label_payload_bytes"] == T * 4
+
+
+def test_final_student_loss_matches_direct(lm_setup, direct_reference):
+    """The distilled final model's test loss is the same number through
+    the session as through the direct loop (states are bit-equal, so
+    the loss must be too — this pins the claim end-to-end)."""
+    model, d = lm_setup["model"], lm_setup["tokens"]
+    res = _run_session(lm_setup, FedKTConfig(**FCFG), "lm")
+    batch = {"tokens": jnp.asarray(d["test"][:, :-1]),
+             "labels": jnp.asarray(d["test"][:, 1:])}
+    loss_session = float(model.loss(res.final_state, batch, remat=False))
+    loss_direct = float(model.loss(direct_reference["final"], batch,
+                                   remat=False))
+    assert np.isfinite(loss_session)
+    assert loss_session == loss_direct
+
+
+def test_lm_engines_agree_under_l2_noise(lm_setup):
+    """Under FedKT-L2 the vote is noised and the accountant consumes the
+    CLEAN gap: loop and lm engines must still produce identical labels
+    (same key -> same Laplace draw), identical clean gaps, and the same
+    epsilon."""
+    fcfg = FedKTConfig(**{**FCFG, "privacy_level": "L2", "gamma": 0.05,
+                          "query_fraction": 0.5})
+    r_loop = _run_session(lm_setup, fcfg, "loop")
+    r_lm = _run_session(lm_setup, fcfg, "lm")
+    assert r_loop.epsilon == r_lm.epsilon > 0
+    assert r_loop.accuracy == r_lm.accuracy
+    _tree_equal(r_loop.student_states, r_lm.student_states)
+    _tree_equal(r_loop.final_state, r_lm.final_state)
+
+
+def test_lm_thread_transport_matches_inprocess(lm_setup):
+    """LM parties fan out over the thread transport bit-identically
+    (precomputed keys + stateless learners, like every other mode)."""
+    fcfg = FedKTConfig(**FCFG)
+    ref = _run_session(lm_setup, fcfg, "lm")
+    par = _run_session(lm_setup, fcfg, "lm", transport="thread",
+                       parallelism=2)
+    assert par.accuracy == ref.accuracy
+    _tree_equal(par.student_states, ref.student_states)
+    assert par.meta["wire_bytes"] == ref.meta["wire_bytes"]
+
+
+def test_session_wire_meta_counts_tokens(lm_setup):
+    """Label accounting counts TOKENS on the LM path: raw payload is
+    n_parties * T * 4 bytes and the framed size (measured codec framing)
+    is strictly larger by only the header."""
+    res = _run_session(lm_setup, FedKTConfig(**FCFG), "lm")
+    d = lm_setup["tokens"]
+    T = (d["public"].shape[1] - 1) * len(d["public"])
+    wb = res.meta["wire_bytes"]
+    assert wb["labels"] == FCFG["num_parties"] * T * 4
+    assert wb["labels"] < wb["labels_framed"] < wb["labels"] + 4096
+    assert wb["updates"] > wb["updates_payload"] > 0
+
+
+def test_lm_learner_pickles_after_use(lm_setup):
+    """Subprocess transports pickle parties (learners included); the
+    jitted-step caches must be dropped, not shipped."""
+    lrn = LMLearner(lm_setup["model"], lm_setup["tcfg"])
+    X = lm_setup["tokens"]["public"]
+    p1 = lrn.predict(lrn.fit(jax.random.PRNGKey(0), X), X)
+    clone = pickle.loads(pickle.dumps(lrn))        # caches populated
+    assert clone.tcfg == lrn.tcfg and clone.data_seed == lrn.data_seed
+    p2 = clone.predict(clone.fit(jax.random.PRNGKey(0), X), X)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_engine_registry_includes_lm():
+    assert get_engine("lm").name == "lm"
+    eng = LMEngine()
+    assert get_engine(eng) is eng
+    with pytest.raises(TypeError):
+        eng.fit_teachers([], object(), [])         # generic learner
+    with pytest.raises(ValueError):
+        lrn = LMLearner(Model(tiny_lm_config()), TrainConfig())
+        eng.label_queries(lrn, None, None, 10)     # num_classes != vocab
+
+
+# ---------------------------------------------------------------------------
+# Full-size variant: the example's phi4-family smoke config
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_session_lm_matches_direct_loop_full_size():
+    """Seed-for-seed parity at the example's scale (reduced phi4 config,
+    512-token vocab, bf16 activations) — scheduled full run only."""
+    cfg, model = smoke_model("phi4-mini-3.8b", vocab_size=512)
+    tcfg = TrainConfig(batch_size=8, seq_len=64, steps=10,
+                       learning_rate=3e-3)
+    fcfg = FedKTConfig(num_parties=2, num_partitions=2, num_subsets=2,
+                       num_classes=cfg.vocab_size, beta=100.0, seed=0)
+    data = synthetic.tokens(n_seqs=192, seq_len=65, vocab=cfg.vocab_size,
+                            seed=0)
+    direct = _direct_fedkt_lm(model, tcfg, fcfg, data["train"],
+                              data["public"])
+    teacher = LMLearner(model, tcfg)
+    student = LMLearner(model, tcfg, data_seed=fcfg.seed)
+    sdata = lm_session_data(data["train"], data["public"], data["test"])
+    for engine in ("loop", "lm"):
+        res = FedKTSession(teacher, sdata, fcfg, student_learner=student,
+                           final_learner=student, engine=engine).run()
+        _tree_equal(res.student_states, direct["students"])
+        _tree_equal(res.final_state, direct["final"])
+
+
+# ---------------------------------------------------------------------------
+# Wire: codec round-trips for LM-shaped messages, framed-bytes parity
+# ---------------------------------------------------------------------------
+def _lm_update(rng, members, s, B, S, d=8):
+    """An LM-shaped PartyUpdate: member-stacked param trees (mixed f32 /
+    bf16), f32 vote-gap trace over s partitions of B*S tokens."""
+    def member_tree():
+        return {"embed": rng.normal(size=(members, 16, d))
+                .astype(np.float32),
+                "blocks": [{"w": jnp.asarray(
+                    rng.normal(size=(members, d, d)), jnp.bfloat16)}],
+                "step": np.int32(rng.integers(0, 100))}
+    return PartyUpdate(
+        party_id=int(rng.integers(0, 8)),
+        student_states=[member_tree() for _ in range(s)],
+        vote_gaps=rng.random(s * B * S).astype(np.float32),
+        num_examples=int(rng.integers(1, 1000)),
+        meta={"num_teachers": members,
+              "num_query_labels": int(B * S)})
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3))
+def test_codec_roundtrip_lm_update_property(seed, members, s):
+    """encode∘decode identity and exact framed-size accounting for
+    member-stacked LM PartyUpdates."""
+    rng = np.random.default_rng(seed)
+    B, S = int(rng.integers(1, 4)), int(rng.integers(2, 9))
+    upd = _lm_update(rng, members, s, B, S)
+    buf = codec.encode_update(upd)
+    assert codec.update_encoded_nbytes(upd) == len(buf)
+    dec = codec.decode_update(buf)
+    assert dec.party_id == upd.party_id
+    assert dec.num_examples == upd.num_examples
+    assert dec.meta == upd.meta
+    assert dec.wire_bytes() == upd.wire_bytes()
+    _tree_equal(upd.student_states, dec.student_states)
+    np.testing.assert_array_equal(upd.vote_gaps, dec.vote_gaps)
+    assert dec.student_states[0]["blocks"][0]["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_codec_roundtrip_token_labels_property(seed, token_shaped):
+    """The TokenLabels vote-answer kind round-trips bit-for-bit — (B,S)
+    int32 token labels and flat (T,) class labels alike — and
+    labels_encoded_nbytes is the measured framed size."""
+    rng = np.random.default_rng(seed)
+    shape = ((int(rng.integers(1, 5)), int(rng.integers(1, 17)))
+             if token_shaped else (int(rng.integers(1, 65)),))
+    msg = TokenLabels(party_id=int(rng.integers(0, 8)),
+                      labels=rng.integers(0, 512, shape, dtype=np.int32),
+                      meta={"partition": 1})
+    buf = codec.encode_labels(msg)
+    assert codec.labels_encoded_nbytes(msg) == len(buf)
+    dec = codec.decode_labels(buf)
+    assert dec.party_id == msg.party_id and dec.meta == msg.meta
+    assert dec.labels.dtype == np.int32 and dec.labels.shape == shape
+    np.testing.assert_array_equal(dec.labels, msg.labels)
+    assert dec.wire_bytes() == msg.wire_bytes() == msg.labels.nbytes
+    with pytest.raises(ValueError):
+        codec.decode_labels(codec.encode({"w": np.zeros(1)}))
+
+
+def test_lm_protocol_pricing_matches_measured_bytes():
+    """Acceptance: the dry-run's priced LM wire bytes (computed from
+    eval_shape trees, no arrays materialized) equal the codec's measured
+    framed bytes of the REAL messages, bit-for-bit."""
+    members, B, S = 3, 2, 16
+    member = {"embed": np.zeros((64, 8), np.float32),
+              "out": {"w": jnp.zeros((8, 64), jnp.bfloat16)}}
+    priced = codec.lm_protocol_bytes(
+        jax.eval_shape(lambda: member), members, B, S)
+    upd = PartyUpdate(party_id=0, student_states=[member],
+                      vote_gaps=np.zeros((B * S,), np.float32),
+                      num_examples=0, meta={"num_teachers": members})
+    lbl = TokenLabels(party_id=0,
+                      labels=np.zeros((B, S), np.int32))
+    assert priced["update_bytes_per_member"] == len(codec.encode_update(upd))
+    assert priced["update_payload_bytes_per_member"] == upd.wire_bytes()
+    assert priced["label_bytes"] == len(codec.encode_labels(lbl))
+    assert priced["label_payload_bytes"] == B * S * 4
+    assert priced["members"] == members

@@ -19,6 +19,13 @@ party) and records the MEASURED PartyUpdate wire bytes — the
 codec-framed size that actually crossed the party/server boundary, not
 a pytree-size estimate.
 
+A fourth, fleet-scale row runs 128 simulated parties over the socket
+transport: each party ships its update through a real localhost TCP
+connection, and the server streams arrivals into one running vote
+histogram (retain_students=False — constant memory in the party
+count).  The row records the measured framed bytes that crossed the
+sockets and the streamed round's wall-clock.
+
 All engines and transports run the identical protocol and PRNG
 schedule.  Writes the headline numbers to BENCH_federation_engines.json
 at the repo root.
@@ -30,6 +37,8 @@ from __future__ import annotations
 import json
 import os
 import time
+
+import numpy as np
 
 from repro.configs.base import FedKTConfig
 from repro.core.learners import NNLearner, RFLearner
@@ -146,6 +155,70 @@ def bench_parallel_parties(setup, repeats):
     return row
 
 
+def fleet_setup():
+    data = tabular_binary(n=8192, seed=0)
+    learner = NNLearner(MLP(num_features=14, num_classes=2, hidden=8),
+                        num_classes=2, steps=20)
+    cfg = FedKTConfig(num_parties=128, num_partitions=1, num_subsets=2,
+                      num_classes=2, seed=0)
+    return learner, data, cfg, "NNLearner(MLP-8, steps=20)"
+
+
+def bench_fleet_socket(repeats):
+    """Fleet-scale row: 128 simulated parties deliver over localhost
+    TCP, the server folds each arriving update into the ONE running
+    vote histogram (retain_students=False — constant server memory in
+    the party count).  Records the measured codec-framed bytes that
+    crossed the sockets and the wall-clock of the streamed round.
+    Equal-size shards keep the whole fleet in one pow2 training bucket,
+    so the 128 parties share one compiled teacher/student fit."""
+    from repro.federation.net import SocketTransport
+    learner, data, cfg, desc = fleet_setup()
+    rows = (len(data["X_train"]) // cfg.num_parties) * cfg.num_parties
+    shards = np.array_split(np.arange(rows), cfg.num_parties)
+    row = {"config": {"num_parties": cfg.num_parties,
+                      "num_partitions": cfg.num_partitions,
+                      "num_subsets": cfg.num_subsets,
+                      "learner": desc, "engine": "loop",
+                      "rows_per_party": rows // cfg.num_parties,
+                      "parallelism": 8,
+                      "retain_students": False},
+           "transports": {}}
+
+    def one_run():
+        return FedKTSession(
+            learner, data, cfg, engine="loop", party_indices=shards,
+            retain_students=False,
+            transport=SocketTransport(parallelism=8)).run()
+
+    t0 = time.time()
+    res = one_run()
+    cold = time.time() - t0
+    warms = []
+    for _ in range(repeats):
+        t0 = time.time()
+        res = one_run()
+        warms.append(time.time() - t0)
+    report = res.meta["socket"]
+    row["transports"]["socket"] = {
+        "cold_s": round(cold, 3),
+        "warm_s": round(sorted(warms)[len(warms) // 2], 3),
+        "warm_runs_s": [round(w, 3) for w in warms],
+        "accuracy": round(res.accuracy, 4),
+        "parties_s": res.meta["seconds"]["parties"],
+    }
+    wire = res.meta["wire_bytes"]
+    row["arrived"] = len(report["arrived"])
+    row["dropped"] = report["dropped"]
+    row["wire_bytes"] = {
+        "updates_measured": wire["updates"],          # codec-framed truth
+        "updates_payload": wire["updates_payload"],   # raw-array accounting
+        "per_party_framed": wire["updates"] // cfg.num_parties,
+        "labels": wire["labels"],
+    }
+    return row
+
+
 def bench(repeats=REPEATS, write=True, names=None):
     rec = {"repeats": repeats, "benches": {}}
     for name in (names or SETUPS):
@@ -153,6 +226,7 @@ def bench(repeats=REPEATS, write=True, names=None):
     if names is None or "nn" in names:
         rec["benches"]["nn_parallel_parties"] = bench_parallel_parties(
             nn_setup, repeats)
+        rec["benches"]["nn_fleet_socket"] = bench_fleet_socket(repeats)
     if write:
         with open(OUT, "w") as f:
             json.dump(rec, f, indent=1)

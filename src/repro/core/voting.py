@@ -58,24 +58,34 @@ def teacher_vote(preds, num_classes, *, gamma=0.0, key=None,
     return VoteResult(labels, counts, c1 - c2)
 
 
-def consistent_vote(student_preds, num_classes, *, consistent=True,
-                    gamma=0.0, key=None, impl="auto") -> VoteResult:
-    """Server-side vote.  student_preds: (n, s, T) int32.
+def party_vote_counts(student_preds, num_classes, *,
+                      consistent=True) -> jnp.ndarray:
+    """ONE party's additive contribution to the server vote histogram.
 
-    consistent=True implements the paper's consistent voting: a party
-    contributes s votes for class m iff all its s students predict m.
-    gamma > 0 adds Lap(1/gamma) (FedKT-L1, lines 20-21).
+    student_preds: (s, T) int32 — the party's s student predictions.
+    Returns (T, U) int32.  Under consistent voting the party contributes
+    s votes for class m iff all its s students predict m; otherwise each
+    student votes independently.  The full server histogram is the plain
+    integer SUM of these terms over parties, so a streaming aggregator
+    (federation/aggregate.py) folding one update at a time produces
+    counts bit-identical to the all-at-once ``consistent_vote`` — in any
+    arrival order.
     """
-    n, s, T = student_preds.shape
+    s, T = student_preds.shape
     if consistent:
-        first = student_preds[:, 0]                       # (n, T)
-        agree = jnp.all(student_preds == first[:, None], axis=1)  # (n, T)
+        first = student_preds[0]                          # (T,)
+        agree = jnp.all(student_preds == first[None], axis=0)     # (T,)
         onehot = jax.nn.one_hot(first, num_classes, dtype=jnp.int32)
-        counts = s * jnp.sum(onehot * agree[..., None], axis=0)   # (T, U)
-    else:
-        flat = student_preds.reshape(n * s, T)
-        _, counts = ref.vote_aggregate_ref(flat, num_classes)
+        return s * onehot * agree[:, None].astype(jnp.int32)      # (T, U)
+    _, counts = ref.vote_aggregate_ref(student_preds, num_classes)
+    return counts
 
+
+def finalize_vote(counts, *, gamma=0.0, key=None) -> VoteResult:
+    """Noise + argmax + clean-gap bookkeeping over a finished server
+    histogram (the second half of ``consistent_vote``, shared with the
+    streaming aggregator).  counts: (T, U) int32 CLEAN counts."""
+    T, num_classes = counts.shape
     scores = counts.astype(jnp.float32)
     if gamma > 0.0:
         assert key is not None
@@ -83,6 +93,25 @@ def consistent_vote(student_preds, num_classes, *, consistent=True,
     labels = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     top2 = jax.lax.top_k(counts.astype(jnp.float32), 2)[0]
     return VoteResult(labels, counts, top2[:, 0] - top2[:, 1])
+
+
+def consistent_vote(student_preds, num_classes, *, consistent=True,
+                    gamma=0.0, key=None, impl="auto") -> VoteResult:
+    """Server-side vote.  student_preds: (n, s, T) int32.
+
+    consistent=True implements the paper's consistent voting: a party
+    contributes s votes for class m iff all its s students predict m.
+    gamma > 0 adds Lap(1/gamma) (FedKT-L1, lines 20-21).
+
+    Implemented as the sum of per-party ``party_vote_counts`` terms so
+    the batch path and the streaming fold (federation/aggregate.py) are
+    the same integer arithmetic.
+    """
+    counts = jnp.sum(
+        jax.vmap(lambda sp: party_vote_counts(
+            sp, num_classes, consistent=consistent))(student_preds),
+        axis=0)                                           # (T, U)
+    return finalize_vote(counts, gamma=gamma, key=key)
 
 
 def token_teacher_vote(preds_bts, vocab_size, *, gamma=0.0, key=None,

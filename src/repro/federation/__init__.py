@@ -7,26 +7,41 @@
                                       distill.py path — see
                                       docs/engines.md for the contract)
     codec                           — PartyUpdate / TokenLabels <->
-                                      self-describing bytes
+                                      self-describing bytes (versioned
+                                      frames: cross-host peers reject
+                                      incompatible encodings loudly)
     transport.{InProcess,Thread,Subprocess}Transport
                                     — where parties run, how the ONE
                                       message crosses the silo boundary
                                       (always serialized via the codec)
+    net.SocketTransport             — the fleet: updates over real TCP,
+                                      streamed into the running vote
+                                      aggregate, deadline/quorum
+                                      straggler semantics
+                                      (docs/federation.md)
+    aggregate.StreamingVoteAggregate— the server's running fold:
+                                      constant memory in the party
+                                      count, bit-identical to the batch
+                                      vote in any arrival order
     strategies.*                    — every compared algorithm, one shape
 
 See session.FedKTSession for the entry point; its ``transport=`` /
-``parallelism=`` knobs fan independent parties out across threads or
-worker processes with unchanged seeds.
+``parallelism=`` knobs fan independent parties out across threads,
+worker processes, or TCP sockets with unchanged seeds.
 """
 from repro.federation import codec  # noqa: F401
+from repro.federation.aggregate import StreamingVoteAggregate  # noqa: F401
 from repro.federation.engines import (Engine, LMEngine,  # noqa: F401
                                       LoopEngine, VmapEngine, get_engine)
 from repro.federation.messages import (PartyUpdate,  # noqa: F401
                                        RoundResult, TokenLabels,
                                        label_wire_bytes, pytree_bytes)
+from repro.federation.net import (Coordinator, QuorumError,  # noqa: F401
+                                  SocketTransport, run_party_client)
 from repro.federation.party import Party  # noqa: F401
 from repro.federation.server import Server  # noqa: F401
-from repro.federation.session import FedKTSession, query_budget  # noqa: F401
+from repro.federation.session import (FedKTSession,  # noqa: F401
+                                      party_starting_keys, query_budget)
 from repro.federation.strategies import (CentralPATEStrategy,  # noqa: F401
                                          FedKTStrategy, IterativeStrategy,
                                          SoloStrategy, Strategy,
@@ -34,4 +49,4 @@ from repro.federation.strategies import (CentralPATEStrategy,  # noqa: F401
 from repro.federation.transport import (InProcessTransport,  # noqa: F401
                                         SubprocessTransport,
                                         ThreadTransport, Transport,
-                                        get_transport)
+                                        TransportBase, get_transport)

@@ -1,0 +1,146 @@
+"""Streaming server-side aggregation: fold PartyUpdates as they arrive.
+
+The batch server held every PartyUpdate (n parties x s student states)
+before voting — fine for five subprocess silos, fatal for a fleet.
+``StreamingVoteAggregate`` consumes each update the moment it arrives:
+the party's students answer the query set once, their consistent-vote
+contribution is ADDED into one running (T, U) histogram, the per-party
+accounting scalars are folded, and the update is dropped.  Server
+memory is then constant in the number of parties:
+
+    histogram (T, U) int32
+  + per-party SCALARS (wire bytes, example counts, one L2 epsilon term)
+  + (L2 only) the arriving party's gap trace, reduced to its epsilon
+    contribution on the spot — Thm 4 composes parties by ``max``, so
+    the running bound needs one float, not n gap traces.
+
+Bit-identity: ``core.voting.party_vote_counts`` is exactly the per-party
+term the batch ``consistent_vote`` sums, and integer addition commutes —
+folding updates in ANY arrival order produces the same histogram,
+labels, accuracy, and epsilon as the serial loop (test-enforced in
+tests/test_net.py).  ``retain_students=True`` (the default) additionally
+keeps the student states so RoundResult is unchanged for small
+sessions; fleet-scale runs turn it off and keep only the fold.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedKTConfig
+from repro.core import privacy as P
+from repro.core.voting import VoteResult, finalize_vote
+from repro.federation import codec
+from repro.federation.messages import (LABEL_BYTES, PartyUpdate,
+                                       TokenLabels)
+
+
+class StreamingVoteAggregate:
+    """Running consistent-vote histogram + round accounting.
+
+    One instance per round.  ``add`` may be called from the coordinator
+    as each update lands (socket transport) or over a finished list
+    (every other transport) — both paths are the same fold, so there is
+    exactly one aggregation implementation in the codebase.
+    """
+
+    def __init__(self, cfg: FedKTConfig, student_learner, engine, Xq, *,
+                 retain_students: bool = True):
+        self.cfg = cfg
+        self.student_learner = student_learner
+        self.engine = engine
+        self.Xq = Xq
+        self.retain_students = retain_students
+        self.counts = None                  # (T, U) int32 running histogram
+        self._l2_eps: Dict[int, float] = {}   # party_id -> Thm 3 epsilon
+        self._students: Dict[int, Any] = {}
+        self._meta: Dict[int, Dict[str, int]] = {}
+
+    # -- folding ----------------------------------------------------------
+    def add(self, update: PartyUpdate) -> None:
+        """Folds one party's update into the aggregate and drops it."""
+        pid = int(update.party_id)
+        if pid in self._meta:
+            raise ValueError(f"duplicate update from party {pid}")
+        contrib = self.engine.student_vote_counts(
+            self.student_learner, update.student_states, self.Xq,
+            self.cfg.num_classes, consistent=self.cfg.consistent_voting)
+        self.counts = contrib if self.counts is None \
+            else self.counts + contrib
+        if self.cfg.privacy_level == "L2":
+            # reduce the gap trace to its parallel-composition term now;
+            # the trace itself never needs to be retained
+            self._l2_eps[pid] = P.fedkt_l2_epsilon(
+                [np.asarray(update.vote_gaps)], self.cfg.gamma,
+                self.cfg.num_classes)
+        if self.retain_students:
+            self._students[pid] = update.student_states
+        nlabels = int(update.meta["num_query_labels"])
+        self._meta[pid] = {
+            "num_examples": int(update.num_examples),
+            "encoded_bytes": int(update.meta["encoded_bytes"]),
+            "payload_bytes": int(update.wire_bytes()),
+            "num_query_labels": nlabels,
+            "labels_framed": codec.labels_encoded_nbytes(TokenLabels(
+                party_id=pid,
+                labels=jax.ShapeDtypeStruct((nlabels,), np.int32))),
+        }
+
+    # -- results ----------------------------------------------------------
+    @property
+    def num_parties(self) -> int:
+        return len(self._meta)
+
+    @property
+    def party_ids(self) -> List[int]:
+        """Arrived parties, in party-id order (the serial loop's order,
+        whatever order the updates streamed in)."""
+        return sorted(self._meta)
+
+    def finalize(self, key) -> VoteResult:
+        """Noise + argmax over the finished histogram (FedKT-L1 when
+        cfg says so); identical math to the batch ``consistent_vote``."""
+        if self.counts is None:
+            raise ValueError("no party updates were aggregated")
+        gamma = self.cfg.gamma if self.cfg.privacy_level == "L1" else 0.0
+        return finalize_vote(self.counts, gamma=gamma, key=key)
+
+    def epsilon(self, vote: VoteResult) -> Optional[float]:
+        """Data-dependent (eps, delta=1e-5) bound for the configured
+        privacy level over the ARRIVED parties; None under L0."""
+        cfg = self.cfg
+        if cfg.privacy_level == "L1":
+            # party-level: the trusted aggregator sees the global clean
+            # histogram — which is exactly the running fold
+            return P.fedkt_l1_epsilon(np.asarray(vote.counts), cfg.gamma,
+                                      cfg.num_partitions, cfg.num_classes,
+                                      exact=True)
+        if cfg.privacy_level == "L2":
+            # Thm 4 parallel composition: max over the per-party terms
+            # folded at arrival time
+            return float(max(self._l2_eps.values()))
+        return None
+
+    def student_states(self) -> List[List[Any]]:
+        """[party][partition] -> state, party-id order; empty when
+        ``retain_students=False`` (the constant-memory mode)."""
+        return [self._students[pid] for pid in self.party_ids] \
+            if self.retain_students else []
+
+    def wire_meta(self) -> Dict[str, int]:
+        """The session's wire_bytes block, summed over arrived parties
+        (order-independent integer sums — identical to the batch path)."""
+        rows = self._meta.values()
+        return {
+            "updates": sum(r["encoded_bytes"] for r in rows),
+            "updates_payload": sum(r["payload_bytes"] for r in rows),
+            "labels": sum(r["num_query_labels"]
+                          for r in rows) * LABEL_BYTES,
+            "labels_framed": sum(r["labels_framed"] for r in rows),
+        }
+
+    def party_meta(self) -> Dict[int, Dict[str, int]]:
+        """Per-party accounting scalars, keyed by party id."""
+        return {pid: dict(row) for pid, row in self._meta.items()}

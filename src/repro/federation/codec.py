@@ -3,7 +3,15 @@
 A serialized message is self-describing — no pytree template on the
 receiving side:
 
-    MAGIC | uint32 header_len | header JSON | payload
+    MAGIC "FKT" | version byte | uint32 header_len | header JSON | payload
+
+The version byte is the cross-host compatibility gate: a peer speaking
+a different encoding (including the pre-version b"FKT1" frames, whose
+fourth byte 0x31 reads as version 49) gets a clear "codec version
+mismatch" error instead of a garbage decode.  ``decode`` also validates
+the frame length against the header's leaf table, so a truncated frame
+raises instead of silently mis-parsing — both matter once frames cross
+real sockets (federation/net.py) rather than a same-process queue.
 
 The header carries the tree structure (dict/list/tuple/None nesting,
 leaves referenced by their checkpoint-style '/'-joined key path) plus
@@ -33,7 +41,10 @@ from repro.checkpoint.checkpoint import _SEP, flatten_tree
 from repro.federation.messages import (PartyUpdate, TokenLabels,
                                        label_wire_bytes)
 
-MAGIC = b"FKT1"
+MAGIC = b"FKT"
+VERSION = 2          # bumped from the implicit v1 (b"FKT1" magic) when
+#                      the version byte became part of the frame
+_PREFIX = MAGIC + bytes([VERSION])
 _LEN = struct.Struct("<I")
 
 
@@ -94,7 +105,7 @@ def _header(tree, extra: Dict[str, Any] = None) -> Tuple[bytes, list]:
 def encode(tree, extra_header: Dict[str, Any] = None) -> bytes:
     """Serializes a pytree of arrays into one self-describing buffer."""
     hdr, ordered = _header(tree, extra_header)
-    parts = [MAGIC, _LEN.pack(len(hdr)), hdr]
+    parts = [_PREFIX, _LEN.pack(len(hdr)), hdr]
     parts += [np.ascontiguousarray(np.asarray(leaf)).tobytes()
               for _, leaf in ordered]
     return b"".join(parts)
@@ -108,17 +119,41 @@ def encoded_nbytes(tree, extra_header: Dict[str, Any] = None) -> int:
     hdr, ordered = _header(tree, extra_header)
     payload = sum(int(np.prod(leaf.shape, dtype=np.int64))
                   * np.dtype(leaf.dtype).itemsize for _, leaf in ordered)
-    return len(MAGIC) + _LEN.size + len(hdr) + payload
+    return len(_PREFIX) + _LEN.size + len(hdr) + payload
 
 
 def decode(buf: bytes) -> Tuple[Any, Dict[str, Any]]:
-    """Inverse of ``encode``: (pytree of numpy arrays, header dict)."""
+    """Inverse of ``encode``: (pytree of numpy arrays, header dict).
+
+    Raises ValueError — never mis-parses — on a frame that is not ours
+    (bad magic), speaks a different codec version, or was cut short
+    anywhere (prefix, header, payload): the network path depends on
+    truncation being loud.
+    """
     if buf[:len(MAGIC)] != MAGIC:
         raise ValueError("not a federation codec buffer (bad magic)")
-    hlen = _LEN.unpack_from(buf, len(MAGIC))[0]
-    start = len(MAGIC) + _LEN.size
+    if len(buf) < len(_PREFIX) + _LEN.size:
+        raise ValueError(f"truncated codec frame: {len(buf)} bytes is "
+                         f"shorter than the fixed prefix")
+    if buf[len(MAGIC)] != VERSION:
+        raise ValueError(
+            f"codec version mismatch: frame speaks v{buf[len(MAGIC)]}, "
+            f"this peer speaks v{VERSION} — refusing to decode an "
+            f"incompatible encoding")
+    hlen = _LEN.unpack_from(buf, len(_PREFIX))[0]
+    start = len(_PREFIX) + _LEN.size
+    if len(buf) < start + hlen:
+        raise ValueError(f"truncated codec frame: header says "
+                         f"{hlen} bytes but only {len(buf) - start} "
+                         f"follow the prefix")
     header = json.loads(buf[start:start + hlen].decode("utf-8"))
     base = start + hlen
+    payload = max((leaf["off"] + leaf["n"]
+                   for leaf in header["leaves"]), default=0)
+    if len(buf) < base + payload:
+        raise ValueError(f"truncated codec frame: payload needs "
+                         f"{payload} bytes, frame carries "
+                         f"{len(buf) - base}")
     arrays = {}
     for leaf in header["leaves"]:
         dtype = _np_dtype(leaf["dtype"])

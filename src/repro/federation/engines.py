@@ -55,7 +55,7 @@ from typing import Any, List, Protocol, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.voting import teacher_vote
+from repro.core.voting import party_vote_counts, teacher_vote
 
 
 class Engine(Protocol):
@@ -98,6 +98,26 @@ class Engine(Protocol):
         shared X: (len(states), T) int32."""
         ...
 
+    def student_vote_counts(self, learner, states: Sequence[Any], X,
+                            num_classes: int, *,
+                            consistent: bool = True) -> jnp.ndarray:
+        """ONE party's additive server-vote contribution: (T, U) int32.
+        The streaming aggregator (federation/aggregate.py) folds these
+        per arriving update, so the server never holds more than one
+        party's predictions at a time.  Must equal
+        ``voting.party_vote_counts(predict_students(...), ...)`` —
+        the default below — but an engine may fuse predict + count into
+        one dispatch."""
+        ...
+
+
+def _students_vote_counts(engine, learner, states, X, num_classes,
+                          consistent):
+    """Default ``student_vote_counts``: the engine's own student
+    predicts, reduced by ``voting.party_vote_counts``."""
+    preds = engine.predict_students(learner, states, X)
+    return party_vote_counts(preds, num_classes, consistent=consistent)
+
 
 def _serial_fit_students(keys, learner, X, labelsets):
     return [learner.fit(kk, X, y) for kk, y in zip(keys, labelsets)]
@@ -139,6 +159,11 @@ class LoopEngine:
 
     def predict_students(self, learner, states, X):
         return _serial_predict(learner, states, X)
+
+    def student_vote_counts(self, learner, states, X, num_classes, *,
+                            consistent=True):
+        return _students_vote_counts(self, learner, states, X,
+                                     num_classes, consistent)
 
 
 class VmapEngine:
@@ -192,6 +217,11 @@ class VmapEngine:
             return _serial_predict(learner, states, X)
         bank = jax.tree.map(lambda *leaves: jnp.stack(leaves), *states)
         return learner.predict_stacked(bank, X)
+
+    def student_vote_counts(self, learner, states, X, num_classes, *,
+                            consistent=True):
+        return _students_vote_counts(self, learner, states, X,
+                                     num_classes, consistent)
 
 
 class LMEngine:
@@ -248,6 +278,11 @@ class LMEngine:
 
     def predict_students(self, learner, states, X):
         return _serial_predict(learner, states, X)
+
+    def student_vote_counts(self, learner, states, X, num_classes, *,
+                            consistent=True):
+        return _students_vote_counts(self, learner, states, X,
+                                     num_classes, consistent)
 
 
 _ENGINES = {"loop": LoopEngine, "vmap": VmapEngine, "lm": LMEngine}

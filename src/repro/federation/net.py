@@ -1,0 +1,386 @@
+"""Socket federation: the one-shot protocol over real TCP connections.
+
+The codec already made the wire format the boundary — a PartyUpdate is
+one self-describing byte buffer.  This module moves that buffer over an
+actual network:
+
+  frame               : ``uint32 length | codec bytes``.  Length-prefixed
+                        so a stream socket carries exactly one message;
+                        the codec's own magic/version prefix inside the
+                        payload rejects incompatible peers with a clear
+                        error (codec.py).
+  Coordinator         : an asyncio server that accepts party connections
+                        CONCURRENTLY and hands each decoded update to a
+                        consumer queue the moment it arrives — the
+                        session folds it into the running vote aggregate
+                        (federation/aggregate.py) while other parties
+                        are still training.  Nothing ever holds all n
+                        updates at once.
+  SocketTransport     : the ``FedKTSession(transport="socket")`` backend.
+                        By default it also SIMULATES the fleet: party
+                        rounds fan out over a bounded thread pool on
+                        this host, and each worker ships its update
+                        through a real localhost TCP connection.  With
+                        ``spawn=False`` it only coordinates — remote
+                        parties connect from other processes/hosts via
+                        ``run_party_client`` (see launch/federate.py and
+                        docs/federation.md).
+
+Straggler semantics: each party has until ``deadline_s`` (measured from
+round start) to deliver its update.  When the deadline passes — or when
+every remaining party has already failed outright — the round proceeds
+if at least ``min_parties`` updates arrived; stragglers are EXCLUDED
+from the vote and reported in ``round_report["dropped"]`` (surfaced as
+session meta).  Below quorum the round raises ``QuorumError``.  Party
+clients retry their connection with exponential backoff, so a
+coordinator that is still binding its port never costs a party its
+round.
+
+Determinism: party keys are precomputed by the session (PR 3's
+``advance_key`` discipline), updates are integer-folded in any arrival
+order, and the server-side key threading never depends on the network —
+so when all parties respond, the socket session is bit-identical to the
+serial in-process loop (test-enforced in tests/test_net.py).
+"""
+from __future__ import annotations
+
+import asyncio
+import queue
+import socket
+import struct
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.federation.codec import decode_update, encode_update
+from repro.federation.messages import PartyUpdate
+from repro.federation.transport import TransportBase, _decode_annotated
+
+_LEN = struct.Struct("<I")
+MAX_FRAME_BYTES = 1 << 31        # sanity bound on a length prefix
+ACK, NAK = b"\x06", b"\x15"
+
+
+class QuorumError(RuntimeError):
+    """Round ended below ``min_parties`` arrived updates."""
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def send_update_frame(host: str, port: int, payload: bytes, *,
+                      retries: int = 8, backoff_s: float = 0.05,
+                      io_timeout_s: float = 60.0) -> None:
+    """Ships one encoded PartyUpdate to the coordinator: connect (with
+    exponential backoff — the coordinator may still be binding), send
+    the length-prefixed frame, wait for the 1-byte ACK.  A NAK means
+    the coordinator refused the frame (bad codec version, unknown or
+    duplicate party, closed round) — not retryable."""
+    if len(payload) >= MAX_FRAME_BYTES:
+        raise ValueError(f"update frame of {len(payload)} bytes exceeds "
+                         f"the {MAX_FRAME_BYTES}-byte frame bound")
+    last_err: Optional[Exception] = None
+    for attempt in range(retries):
+        try:
+            with socket.create_connection((host, port),
+                                          timeout=io_timeout_s) as sock:
+                sock.sendall(_LEN.pack(len(payload)) + payload)
+                ack = _recv_exact(sock, 1)
+            if ack == ACK:
+                return
+            raise ConnectionError(
+                "coordinator refused the update frame (NAK) — "
+                "incompatible codec version, unknown/duplicate party, "
+                "or the round already closed")
+        except (ConnectionRefusedError, ConnectionResetError,
+                socket.timeout, TimeoutError) as err:
+            last_err = err
+            time.sleep(backoff_s * (2 ** attempt))
+    raise ConnectionError(
+        f"could not deliver update to {host}:{port} after {retries} "
+        f"attempts: {last_err!r}")
+
+
+def run_party_client(host: str, port: int, party, key, X_public,
+                     num_queries: int, engine, *, retries: int = 8,
+                     backoff_s: float = 0.05,
+                     io_timeout_s: float = 60.0) -> int:
+    """The remote-silo entry point: run this party's local round and
+    ship the one resulting PartyUpdate to the coordinator.  Returns the
+    framed byte count (what actually crossed the wire, minus the 4-byte
+    length prefix).  See launch/federate.py for the CLI wrapper."""
+    upd, _ = party.local_round(key, X_public, num_queries, engine)
+    payload = encode_update(upd)
+    send_update_frame(host, port, payload, retries=retries,
+                      backoff_s=backoff_s, io_timeout_s=io_timeout_s)
+    return len(payload)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator
+# ---------------------------------------------------------------------------
+class Coordinator:
+    """Asyncio accept loop in a background thread.
+
+    Decoded updates land on ``self.updates`` (a thread-safe queue) in
+    ARRIVAL order, each annotated with its measured framed bytes; the
+    consuming thread (SocketTransport.stream_round) owns deadlines and
+    quorum.  Per-connection failures (truncated frame, codec version
+    mismatch, unknown party) NAK that peer and are recorded in
+    ``self.errors`` without disturbing the round.
+    """
+
+    def __init__(self, expected_ids: Sequence[int], *,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.host, self._req_port = host, port
+        self.expected = set(int(i) for i in expected_ids)
+        self.updates: "queue.Queue[PartyUpdate]" = queue.Queue()
+        self.errors: List[str] = []
+        self._seen: set = set()
+        self._lock = threading.Lock()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._started = threading.Event()
+        self._server: Optional[asyncio.AbstractServer] = None
+        self.port: Optional[int] = None
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            try:
+                nbytes = _LEN.unpack(await reader.readexactly(
+                    _LEN.size))[0]
+                if nbytes >= MAX_FRAME_BYTES:
+                    raise ValueError(f"frame length {nbytes} exceeds "
+                                     f"bound")
+                payload = await reader.readexactly(nbytes)
+                upd = _decode_annotated(payload)
+                with self._lock:
+                    if upd.party_id not in self.expected:
+                        raise ValueError(f"unknown party "
+                                         f"{upd.party_id}")
+                    if upd.party_id in self._seen:
+                        raise ValueError(f"duplicate update from party "
+                                         f"{upd.party_id}")
+                    self._seen.add(upd.party_id)
+            except (asyncio.IncompleteReadError, ValueError) as err:
+                self.errors.append(f"rejected connection: {err}")
+                writer.write(NAK)
+                await writer.drain()
+                return
+            writer.write(ACK)
+            await writer.drain()
+            self.updates.put(upd)
+        finally:
+            writer.close()
+
+    async def _serve(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self._req_port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._started.set()
+        async with self._server:
+            await self._server.serve_forever()
+
+    def start(self) -> "Coordinator":
+        def runner():
+            self._loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(self._loop)
+            try:
+                self._loop.run_until_complete(self._serve())
+            except asyncio.CancelledError:
+                pass
+            finally:
+                self._loop.close()
+        self._thread = threading.Thread(target=runner, daemon=True,
+                                        name="fedkt-coordinator")
+        self._thread.start()
+        if not self._started.wait(timeout=30.0):
+            raise RuntimeError("coordinator failed to bind within 30s")
+        return self
+
+    def stop(self) -> None:
+        """Stops accepting and joins the loop thread (idempotent).
+        Late stragglers get connection-refused from here on."""
+        loop = self._loop
+        if loop is None or not loop.is_running():
+            return
+
+        def shutdown():
+            for task in asyncio.all_tasks(loop):
+                task.cancel()
+        loop.call_soon_threadsafe(shutdown)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self._loop = None
+
+
+# ---------------------------------------------------------------------------
+# Transport
+# ---------------------------------------------------------------------------
+def _ship_round(party, key, X_public, num_queries, engine,
+                host, port, retries, backoff_s, io_timeout_s):
+    return run_party_client(host, port, party, key, X_public,
+                            num_queries, engine, retries=retries,
+                            backoff_s=backoff_s,
+                            io_timeout_s=io_timeout_s)
+
+
+class SocketTransport(TransportBase):
+    """Fleet transport: parties deliver their updates over TCP, the
+    coordinator streams them into the running aggregate as they land.
+
+    parallelism : bound on concurrently-running simulated parties
+                  (default min(n, 8) — a fleet of hundreds shares the
+                  host, so one thread per party would thrash).
+    host/port   : coordinator bind address (port=0 → ephemeral).
+    deadline_s  : per-party deadline from round start; None waits
+                  indefinitely (failed parties still end the wait).
+    min_parties : quorum — proceed at the deadline with at least this
+                  many updates, dropping stragglers.  None requires
+                  every party.
+    spawn       : False runs NO local parties; the coordinator waits for
+                  remote ``run_party_client`` peers (cross-host mode).
+    connect_retries / backoff_s / io_timeout_s : party-side client
+                  knobs (exponential backoff between connect attempts).
+
+    After each round, ``round_report`` holds the dropout accounting the
+    session surfaces as ``meta["socket"]``.
+    """
+    name = "socket"
+    streams = True
+
+    def __init__(self, parallelism: Optional[int] = None, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 deadline_s: Optional[float] = None,
+                 min_parties: Optional[int] = None, spawn: bool = True,
+                 connect_retries: int = 8, backoff_s: float = 0.05,
+                 io_timeout_s: float = 60.0):
+        self.parallelism = parallelism
+        self.host, self.port = host, port
+        self.deadline_s = deadline_s
+        self.min_parties = min_parties
+        self.spawn = spawn
+        self.connect_retries = connect_retries
+        self.backoff_s = backoff_s
+        self.io_timeout_s = io_timeout_s
+        self.round_report: Dict[str, Any] = {}
+
+    def stream_round(self, parties, keys, X_public, num_queries,
+                     engine) -> Iterator[PartyUpdate]:
+        """Yields decoded PartyUpdates in ARRIVAL order, as they land.
+        The consumer folds each into the streaming aggregate; this
+        generator never accumulates updates."""
+        expected = [int(p.party_id) for p in parties]
+        coord = Coordinator(expected, host=self.host,
+                            port=self.port).start()
+        workers = min(len(parties), self.parallelism or 8)
+        pool: Optional[ThreadPoolExecutor] = None
+        failed: Dict[int, str] = {}
+        failed_lock = threading.Lock()
+        t0 = time.monotonic()
+        try:
+            if self.spawn:
+                pool = ThreadPoolExecutor(
+                    max_workers=workers,
+                    thread_name_prefix="fedkt-party")
+                Xpub = np.asarray(X_public)
+
+                def _done(pid):
+                    def cb(fut):
+                        if fut.cancelled():
+                            return
+                        err = fut.exception()
+                        if err is not None:
+                            with failed_lock:
+                                failed[pid] = repr(err)
+                    return cb
+
+                for party, key in zip(parties, keys):
+                    fut = pool.submit(
+                        _ship_round, party, key, Xpub, num_queries,
+                        engine, self.host, coord.port,
+                        self.connect_retries, self.backoff_s,
+                        self.io_timeout_s)
+                    fut.add_done_callback(_done(int(party.party_id)))
+
+            arrived: List[int] = []
+            arrival_s: Dict[int, float] = {}
+            bytes_by_party: Dict[int, int] = {}
+            quorum = (len(expected) if self.min_parties is None
+                      else self.min_parties)
+            while len(arrived) < len(expected):
+                with failed_lock:
+                    nfailed = len(failed)
+                if len(arrived) + nfailed == len(expected):
+                    break                     # nobody left to wait for
+                elapsed = time.monotonic() - t0
+                late = (self.deadline_s is not None
+                        and elapsed >= self.deadline_s)
+                try:
+                    # at the deadline, still drain updates that already
+                    # landed — only parties with nothing delivered drop
+                    upd = coord.updates.get_nowait() if late \
+                        else coord.updates.get(timeout=0.05)
+                except queue.Empty:
+                    if late:
+                        break                 # deadline: quorum decides
+                    continue
+                arrived.append(int(upd.party_id))
+                arrival_s[int(upd.party_id)] = round(
+                    time.monotonic() - t0, 3)
+                bytes_by_party[int(upd.party_id)] = \
+                    upd.meta["encoded_bytes"]
+                yield upd
+
+            dropped = sorted(set(expected) - set(arrived))
+            with failed_lock:
+                report_failed = dict(failed)
+            self.round_report = {
+                "port": coord.port,
+                "expected": len(expected),
+                "arrived": arrived,            # arrival order
+                "dropped": dropped,
+                "failed": report_failed,       # party_id -> error
+                "deadline_s": self.deadline_s,
+                "min_parties": self.min_parties,
+                "quorum": quorum,
+                "framed_bytes": bytes_by_party,
+                "arrival_s": arrival_s,
+                "rejected": list(coord.errors),
+            }
+            if len(arrived) < quorum:
+                raise QuorumError(
+                    f"round ended with {len(arrived)}/{len(expected)} "
+                    f"updates (quorum {quorum}); missing parties "
+                    f"{dropped}"
+                    + (f"; failures: {report_failed}" if report_failed
+                       else ""))
+        finally:
+            coord.stop()
+            if pool is not None:
+                # never block the round on stragglers we already
+                # dropped: queued parties are cancelled, running ones
+                # get connection-refused when they try to deliver
+                pool.shutdown(wait=False, cancel_futures=True)
+
+    def run_round(self, parties, keys, X_public, num_queries, engine):
+        """List form of the round for the non-streaming server path
+        (Transport contract: party order)."""
+        updates = list(self.stream_round(parties, keys, X_public,
+                                         num_queries, engine))
+        return sorted(updates, key=lambda u: u.party_id)

@@ -1,23 +1,25 @@
 """Server: the aggregator side of the FedKT protocol (Algorithm 1
 lines 13-23).
 
-Collects the n PartyUpdates, runs the consistent vote over the n*s
-student models, distills the final model from the voted labels, and —
-being the only place that sees the global vote histogram — owns the
-L1 privacy accounting.  L2 accounting composes the parties' local gap
-traces (Thm 4 parallel composition).
+Folds the arriving PartyUpdates into a ``StreamingVoteAggregate``
+(federation/aggregate.py) — one running consistent-vote histogram,
+constant memory in the party count — then noises, argmaxes, and
+distills the final model from the voted labels.  Being the only place
+that sees the global vote histogram, the server side owns the L1
+privacy accounting; L2 accounting composes the parties' local gap
+traces (Thm 4 parallel composition), folded per arrival.  The batch
+``aggregate`` entry point and the socket transport's streaming path are
+the SAME fold, so they cannot diverge.
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedKTConfig
-from repro.core import privacy as P
-from repro.core.voting import VoteResult, consistent_vote
+from repro.federation.aggregate import StreamingVoteAggregate
 from repro.federation.engines import Engine, LoopEngine
 from repro.federation.messages import PartyUpdate
 
@@ -28,44 +30,40 @@ class Server:
         self.student_learner = student_learner
         self.final_learner = final_learner
 
-    def aggregate(self, key, updates: Sequence[PartyUpdate], X_public,
-                  num_queries: int, engine: Engine = None):
-        """Consistent vote over all student models + final distillation.
+    def make_aggregate(self, X_public, num_queries: int,
+                       engine: Engine = None, *,
+                       retain_students: bool = True
+                       ) -> StreamingVoteAggregate:
+        """A fresh per-round fold.  ``engine`` decides how each party's
+        s student models answer the query set (serial loop vs one
+        stacked predict); defaults to the serial reference engine."""
+        return StreamingVoteAggregate(
+            self.cfg, self.student_learner, engine or LoopEngine(),
+            X_public[:num_queries], retain_students=retain_students)
 
-        ``engine`` decides how the n*s student models answer the query
-        set (serial loop vs one stacked predict); defaults to the serial
-        reference engine.  Returns (final_state, VoteResult, key).
-        """
-        cfg = self.cfg
-        engine = engine or LoopEngine()
-        Xq = X_public[:num_queries]
-        student_preds = jnp.stack([
-            engine.predict_students(self.student_learner,
-                                    upd.student_states, Xq)
-            for upd in updates])                      # (n, s, Tq)
+    def finalize(self, key, agg: StreamingVoteAggregate):
+        """Vote over the finished histogram + final distillation.
+        Returns (final_state, VoteResult, key) — key threading matches
+        the legacy loop split-for-split (one split for vote noise, one
+        for the final fit)."""
         key, kk = jax.random.split(key)
-        gamma = cfg.gamma if cfg.privacy_level == "L1" else 0.0
-        vote = consistent_vote(student_preds, cfg.num_classes,
-                               consistent=cfg.consistent_voting,
-                               gamma=gamma, key=kk)
+        vote = agg.finalize(kk)
         key, kk = jax.random.split(key)
-        final_state = self.final_learner.fit(kk, Xq,
+        final_state = self.final_learner.fit(kk, agg.Xq,
                                              np.asarray(vote.labels))
         return final_state, vote, key
 
-    def epsilon(self, vote: VoteResult,
-                updates: Sequence[PartyUpdate]) -> Optional[float]:
+    def aggregate(self, key, updates: Sequence[PartyUpdate], X_public,
+                  num_queries: int, engine: Engine = None):
+        """Batch entry point: fold a finished update list, then
+        finalize.  Bit-identical to the streaming path in any order."""
+        agg = self.make_aggregate(X_public, num_queries, engine)
+        for upd in updates:
+            agg.add(upd)
+        return self.finalize(key, agg)
+
+    def epsilon(self, vote, agg: StreamingVoteAggregate) -> Optional[float]:
         """Data-dependent (eps, delta=1e-5) bound for the configured
-        privacy level; None under L0."""
-        cfg = self.cfg
-        if cfg.privacy_level == "L1":
-            # party-level: consistent voting moves counts in multiples
-            # of s, so the accountant works on the raw histogram with
-            # sensitivity 2s (privacy.py Thm 1+2)
-            return P.fedkt_l1_epsilon(np.asarray(vote.counts), cfg.gamma,
-                                      cfg.num_partitions, cfg.num_classes,
-                                      exact=True)
-        if cfg.privacy_level == "L2":
-            return P.fedkt_l2_epsilon([u.vote_gaps for u in updates],
-                                      cfg.gamma, cfg.num_classes)
-        return None
+        privacy level; None under L0.  Delegates to the aggregate, which
+        folded the per-party L2 terms at arrival time."""
+        return agg.epsilon(vote)

@@ -15,17 +15,32 @@ every mode).  One session == one round == one result:
     FedKTSession(learner, data, cfg, transport="subprocess",
                  parallelism=4).run()
 
+    # fleet scale: parties deliver over TCP, the server folds each
+    # arriving update into ONE running vote histogram (constant memory
+    # in the party count with retain_students=False), stragglers are
+    # dropped at the deadline once ``min_parties`` arrived
+    from repro.federation.net import SocketTransport
+    FedKTSession(learner, data, cfg, retain_students=False,
+                 transport=SocketTransport(parallelism=8, deadline_s=60,
+                                           min_parties=90)).run()
+
+Every transport's updates are folded through the SAME
+``StreamingVoteAggregate`` — a transport with ``streams = True``
+(socket) folds per arrival, the others fold the finished list — so the
+batch and streaming servers cannot diverge.
+
 Seed contract: with ``engine="loop"`` the session reproduces the legacy
 ``run_fedkt`` accuracy and epsilon bit-for-bit at a fixed cfg.seed, and
 every transport reproduces the in-process result bit-for-bit — party
 keys are precomputed from the serial schedule, so fan-out order never
-changes any party's randomness (test-enforced in
-tests/test_federation.py and tests/test_transport.py).
+changes any party's randomness, and the vote histogram is an integer
+sum, so arrival order cannot change it either (test-enforced in
+tests/test_federation.py, tests/test_transport.py, tests/test_net.py).
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
 import numpy as np
@@ -33,13 +48,25 @@ import numpy as np
 from repro.configs.base import FedKTConfig
 from repro.core.learners import accuracy
 from repro.core.partition import dirichlet_partition
-from repro.federation import codec
 from repro.federation.engines import get_engine
-from repro.federation.messages import (LABEL_BYTES, PartyUpdate,
-                                       RoundResult, TokenLabels)
+from repro.federation.messages import RoundResult
 from repro.federation.party import Party
 from repro.federation.server import Server
 from repro.federation.transport import get_transport
+
+
+def party_starting_keys(parties, seed: int):
+    """Every party's starting key (the serial loop's exact split
+    positions, played forward without training) plus the key the server
+    side continues from.  Shared with launch/federate.py: a remote
+    party derives ITS key from the same schedule, so a cross-host round
+    reproduces the in-process one seed-for-seed."""
+    key = jax.random.PRNGKey(seed)
+    keys = []
+    for party in parties:
+        keys.append(key)
+        key = party.advance_key(key)
+    return keys, key
 
 
 def query_budget(cfg: FedKTConfig, num_public: int):
@@ -56,18 +83,26 @@ class FedKTSession:
 
     data: dict with X_train/y_train/X_public/X_test/y_test arrays.
     engine: "loop" | "vmap" | an engines.Engine instance.
-    transport: "inprocess" | "thread" | "subprocess" | a
+    transport: "inprocess" | "thread" | "subprocess" | "socket" | a
         transport.Transport instance — where the party rounds run and
-        how their updates cross the party/server boundary.
+        how their updates cross the party/server boundary.  Pass a
+        ``net.SocketTransport(...)`` instance to set the fleet knobs
+        (deadline_s, min_parties, backoff).
     parallelism: worker count for the fan-out transports (defaults to
-        one worker per party; must be omitted when passing a transport
-        instance).
+        one worker per party — the socket transport caps at 8; must be
+        omitted when passing a transport instance).
+    retain_students: keep every party's student states in the
+        RoundResult (the default, and the historical behavior).  False
+        drops each update after it is folded into the running vote
+        aggregate — constant server memory in the party count, the
+        fleet-scale mode.
     """
 
     def __init__(self, learner, data: Dict[str, np.ndarray],
                  cfg: FedKTConfig, *, student_learner=None,
                  final_learner=None, engine="loop", party_indices=None,
-                 transport="inprocess", parallelism=None):
+                 transport="inprocess", parallelism=None,
+                 retain_students=True):
         self.learner = learner
         self.student_learner = student_learner or learner
         self.final_learner = final_learner or learner
@@ -75,6 +110,7 @@ class FedKTSession:
         self.cfg = cfg
         self.engine = get_engine(engine)
         self.transport = get_transport(transport, parallelism)
+        self.retain_students = retain_students
 
         ytr = data["y_train"]
         if party_indices is None:
@@ -89,40 +125,47 @@ class FedKTSession:
         self.tq_party, self.tq_server = query_budget(cfg,
                                                      len(data["X_public"]))
 
-    def _party_keys(self, key):
-        """Every party's starting key (the serial loop's exact split
-        positions, played forward without training) plus the key the
-        server side continues from."""
-        keys = []
-        for party in self.parties:
-            keys.append(key)
-            key = party.advance_key(key)
-        return keys, key
-
     def run(self, verbose: bool = False) -> RoundResult:
         cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
         Xpub = self.data["X_public"]
+        party_keys, key = party_starting_keys(self.parties, cfg.seed)
+        agg = self.server.make_aggregate(
+            Xpub, self.tq_server, self.engine,
+            retain_students=self.retain_students)
+        streaming = getattr(self.transport, "streams", False)
 
-        t0 = time.time()
-        party_keys, key = self._party_keys(key)
-        updates: List[PartyUpdate] = self.transport.run_round(
-            self.parties, party_keys, Xpub, self.tq_party, self.engine)
-        t_parties = time.time() - t0
-        if verbose:
-            for party, upd in zip(self.parties, updates):
-                print(f"party {party.party_id}: {party.num_examples} "
+        def fold(upd):
+            agg.add(upd)
+            if verbose:
+                print(f"party {upd.party_id}: {upd.num_examples} "
                       f"examples, {upd.meta['num_teachers']} teachers "
                       f"trained, {upd.meta['encoded_bytes']} wire bytes")
 
         t0 = time.time()
-        final_state, vote, key = self.server.aggregate(
-            key, updates, Xpub, self.tq_server, engine=self.engine)
+        if streaming:
+            # the server folds each update the moment it arrives; party
+            # training and aggregation overlap, so "parties" time IS the
+            # whole collect-and-fold phase
+            for upd in self.transport.stream_round(
+                    self.parties, party_keys, Xpub, self.tq_party,
+                    self.engine):
+                fold(upd)
+            t_parties = time.time() - t0
+            t0 = time.time()
+        else:
+            updates = self.transport.run_round(
+                self.parties, party_keys, Xpub, self.tq_party,
+                self.engine)
+            t_parties = time.time() - t0
+            t0 = time.time()
+            for upd in updates:
+                fold(upd)
+        final_state, vote, key = self.server.finalize(key, agg)
         t_server = time.time() - t0
 
         acc = accuracy(self.final_learner, final_state,
                        self.data["X_test"], self.data["y_test"])
-        eps = self.server.epsilon(vote, updates)
+        eps = self.server.epsilon(vote, agg)
 
         meta: Dict[str, Any] = {
             "party_sizes": [p.num_examples for p in self.parties],
@@ -132,28 +175,16 @@ class FedKTSession:
             "queries": {"party": self.tq_party, "server": self.tq_server},
             "seconds": {"parties": round(t_parties, 3),
                         "server": round(t_server, 3)},
-            "wire_bytes": {
-                # measured: the codec-framed bytes that actually crossed
-                # the party/server boundary (header + payload)
-                "updates": int(sum(u.meta["encoded_bytes"]
-                                   for u in updates)),
-                # accounted: raw array payload (students + gap trace)
-                "updates_payload": int(sum(u.wire_bytes()
-                                           for u in updates)),
-                # label answer, one per party: raw payload (one int32
-                # per vote unit — per example for tabular learners, per
-                # TOKEN on the LM path) and its codec-framed size
-                "labels": int(sum(u.meta["num_query_labels"]
-                                  for u in updates)) * LABEL_BYTES,
-                "labels_framed": int(sum(
-                    codec.labels_encoded_nbytes(TokenLabels(
-                        party_id=u.party_id,
-                        labels=jax.ShapeDtypeStruct(
-                            (u.meta["num_query_labels"],), np.int32)))
-                    for u in updates)),
-            },
+            # measured codec-framed bytes + raw-payload accounting,
+            # summed over the parties whose updates actually arrived
+            "wire_bytes": agg.wire_meta(),
+            "num_updates": agg.num_parties,
         }
+        if streaming:
+            report = dict(self.transport.round_report)
+            meta["socket"] = report
+            # dropout accounting: stragglers excluded from the vote
+            meta["dropped_parties"] = report.get("dropped", [])
         return RoundResult(final_state=final_state, accuracy=acc,
-                           student_states=[u.student_states
-                                           for u in updates],
+                           student_states=agg.student_states(),
                            epsilon=eps, meta=meta)

@@ -17,6 +17,16 @@ hot path in ALL modes and ``meta["encoded_bytes"]`` is the measured
                        PartyUpdate bytes are literally what crosses the
                        process boundary — the paper's cross-silo
                        deployment shape, one process per silo.
+  SocketTransport    : federation/net.py — updates cross REAL TCP
+                       connections, streamed into the server's running
+                       vote aggregate with deadline/quorum straggler
+                       semantics.  The only transport with a
+                       ``stream_round`` (``streams = True``).
+
+Every transport is a context manager, and a party failure mid-round
+must never leak execution resources: the subprocess pool is TERMINATED
+(not drained) when a party raises, so no spawned interpreter outlives
+the round it was serving (regression-tested in tests/test_transport.py).
 
 Seed contract: parties receive PRECOMPUTED keys (the serial schedule
 played forward by the session), so fan-out order never changes any
@@ -27,7 +37,7 @@ tests/test_transport.py).
 from __future__ import annotations
 
 import pickle
-from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, List, Optional, Protocol, Sequence
 
 import numpy as np
@@ -48,6 +58,30 @@ class Transport(Protocol):
         ``meta["encoded_bytes"]`` records its measured wire size."""
         ...
 
+    def close(self) -> None:
+        """Releases any resources the transport holds across rounds.
+        Idempotent; per-round resources must already be cleaned up by
+        ``run_round`` itself (even when a party raises)."""
+        ...
+
+
+class TransportBase:
+    """Context-manager plumbing shared by every transport: ``close`` is
+    idempotent and guaranteed on ``with`` exit, success or failure.
+    Per-ROUND resources (pools, sockets) are the run methods' own
+    responsibility — they clean up in ``finally`` so a crashing party
+    can never leak workers, with or without the ``with``."""
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
+
 
 def _decode_annotated(buf: bytes) -> PartyUpdate:
     upd = decode_update(buf)
@@ -60,7 +94,7 @@ def _encoded_round(party, key, X_public, num_queries, engine) -> bytes:
     return encode_update(upd)
 
 
-class InProcessTransport:
+class InProcessTransport(TransportBase):
     """Serial in-process reference: today's semantics plus the codec
     round-trip, so in-process and cross-process servers see byte-wise
     identical updates."""
@@ -79,7 +113,7 @@ class InProcessTransport:
                 for p, k in zip(parties, keys)]
 
 
-class ThreadTransport:
+class ThreadTransport(TransportBase):
     """Concurrent parties in one interpreter.  Engines and learners are
     stateless (jit caches are internally synchronized), so sharing them
     across workers is safe; results are collected in party order."""
@@ -90,11 +124,17 @@ class ThreadTransport:
 
     def run_round(self, parties, keys, X_public, num_queries, engine):
         workers = self.parallelism or len(parties)
-        with ThreadPoolExecutor(max_workers=workers) as ex:
+        ex = ThreadPoolExecutor(max_workers=workers)
+        try:
             futs = [ex.submit(_encoded_round, p, k, X_public,
                               num_queries, engine)
                     for p, k in zip(parties, keys)]
             return [_decode_annotated(f.result()) for f in futs]
+        finally:
+            # a failed party must not make the round run the REMAINING
+            # parties to completion before raising: drop queued work
+            # (running threads finish their current party and exit)
+            ex.shutdown(wait=False, cancel_futures=True)
 
 
 def _subprocess_worker(blob: bytes) -> bytes:
@@ -104,11 +144,16 @@ def _subprocess_worker(blob: bytes) -> bytes:
     return _encoded_round(party, key, X_public, num_queries, engine)
 
 
-class SubprocessTransport:
+class SubprocessTransport(TransportBase):
     """One worker process per party (spawn start method: safe after the
     parent has initialized JAX).  Workers re-import and re-jit, so cold
     cost is high — this transport exists to make the cross-silo
-    deployment real, not to win single-host benchmarks."""
+    deployment real, not to win single-host benchmarks.
+
+    Cleanup contract: when any party raises, the whole worker pool is
+    terminated on the spot — the old executor-based round left the
+    remaining interpreters running (and kept training dropped parties)
+    until their queues drained."""
     name = "subprocess"
 
     def __init__(self, parallelism: Optional[int] = None):
@@ -122,10 +167,21 @@ class SubprocessTransport:
                                engine))
                  for p, k in zip(parties, keys)]
         ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=workers,
-                                 mp_context=ctx) as ex:
-            return [_decode_annotated(b)
-                    for b in ex.map(_subprocess_worker, blobs)]
+        pool = ctx.Pool(processes=workers)
+        done = False
+        try:
+            encoded = pool.map(_subprocess_worker, blobs)
+            pool.close()
+            pool.join()
+            done = True
+            return [_decode_annotated(b) for b in encoded]
+        finally:
+            if not done:
+                # a party failed: kill every worker interpreter NOW
+                # instead of letting them finish (or start) the other
+                # parties' rounds
+                pool.terminate()
+                pool.join()
 
 
 _TRANSPORTS = {"inprocess": InProcessTransport, "thread": ThreadTransport,
@@ -134,11 +190,17 @@ _TRANSPORTS = {"inprocess": InProcessTransport, "thread": ThreadTransport,
 
 def get_transport(transport, parallelism: Optional[int] = None) -> Transport:
     """Transport instance from a name ("inprocess" | "thread" |
-    "subprocess") or pass-through of an instance."""
+    "subprocess" | "socket") or pass-through of an instance."""
     if isinstance(transport, str):
+        if transport == "socket":
+            # net.py imports this module; resolve lazily to avoid the
+            # cycle while keeping one registry entry point
+            from repro.federation.net import SocketTransport
+            return SocketTransport(parallelism=parallelism)
         if transport not in _TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; "
-                             f"available: {sorted(_TRANSPORTS)}")
+                             f"available: "
+                             f"{sorted([*_TRANSPORTS, 'socket'])}")
         return _TRANSPORTS[transport](parallelism=parallelism)
     if parallelism is not None:
         raise ValueError("parallelism= only applies when the transport "

@@ -1,0 +1,151 @@
+"""Cross-silo federation launcher: one FedKT round over real sockets.
+
+Three roles, sharing one seeded setup (data, partition, key schedule),
+so a round split across OS processes — or hosts — reproduces the
+in-process session seed-for-seed:
+
+  local        : the whole fleet on this host.  FedKTSession with the
+                 socket transport; parties are simulated on a thread
+                 pool and deliver over localhost TCP.
+
+  coordinator  : the server side only (``SocketTransport(spawn=False)``).
+                 Binds host:port and waits for remote parties, folding
+                 each arriving update into the streaming vote aggregate;
+                 proceeds at quorum when the deadline passes.
+
+  party        : one silo.  Rebuilds ITS shard and starting key from
+                 the shared seed, runs the local round, ships the one
+                 PartyUpdate to the coordinator (connect retries with
+                 exponential backoff baked in).
+
+Demo (two shells):
+  PYTHONPATH=src python -m repro.launch.federate coordinator \
+      --parties 4 --port 7733 --deadline-s 120 --min-parties 3
+  for i in 0 1 2 3; do PYTHONPATH=src python -m repro.launch.federate \
+      party --party-id $i --parties 4 --port 7733 & done
+
+See docs/federation.md for the deployment guide (timeout/quorum knobs,
+dropout accounting, wire-byte pricing).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import FedKTConfig
+from repro.core.learners import NNLearner
+from repro.data.synthetic import tabular_binary
+from repro.federation import (FedKTSession, SocketTransport, get_engine,
+                              party_starting_keys, query_budget,
+                              run_party_client)
+from repro.models.smallnets import MLP
+
+
+def build_session(args, transport) -> FedKTSession:
+    """The shared seeded setup: every role derives the same data,
+    partition, and key schedule from --seed, so the only thing that
+    differs between roles is WHERE each piece runs."""
+    data = tabular_binary(n=args.n_train, seed=args.seed)
+    learner = NNLearner(MLP(num_features=14, num_classes=2,
+                            hidden=args.hidden),
+                        num_classes=2, steps=args.steps)
+    cfg = FedKTConfig(num_parties=args.parties,
+                      num_partitions=args.partitions,
+                      num_subsets=args.subsets, num_classes=2,
+                      privacy_level=args.privacy, gamma=args.gamma,
+                      seed=args.seed)
+    return FedKTSession(learner, data, cfg, engine=args.engine,
+                        transport=transport,
+                        retain_students=not args.drop_students)
+
+
+def _report(result) -> None:
+    sock = result.meta.get("socket", {})
+    print(json.dumps({
+        "accuracy": round(float(result.accuracy), 4),
+        "epsilon": result.epsilon,
+        "arrived": len(sock.get("arrived", [])),
+        "dropped_parties": result.meta.get("dropped_parties", []),
+        "wire_bytes": result.meta["wire_bytes"],
+        "seconds": result.meta["seconds"],
+    }, indent=1))
+
+
+def run_local(args) -> None:
+    transport = SocketTransport(parallelism=args.parallelism,
+                                port=args.port,
+                                deadline_s=args.deadline_s,
+                                min_parties=args.min_parties)
+    result = build_session(args, transport).run(verbose=args.verbose)
+    _report(result)
+
+
+def run_coordinator(args) -> None:
+    transport = SocketTransport(host=args.host, port=args.port,
+                                spawn=False,
+                                deadline_s=args.deadline_s,
+                                min_parties=args.min_parties)
+    print(f"coordinator: waiting for {args.parties} parties on "
+          f"{args.host}:{args.port} (deadline "
+          f"{args.deadline_s}s, quorum "
+          f"{args.min_parties or args.parties})")
+    result = build_session(args, transport).run(verbose=args.verbose)
+    _report(result)
+
+
+def run_party(args) -> None:
+    session = build_session(args, "inprocess")   # setup only, never run
+    keys, _ = party_starting_keys(session.parties, args.seed)
+    party = session.parties[args.party_id]
+    tq_party, _ = query_budget(session.cfg,
+                               len(session.data["X_public"]))
+    nbytes = run_party_client(
+        args.host, args.port, party, keys[args.party_id],
+        session.data["X_public"], tq_party, get_engine(args.engine),
+        retries=args.retries, backoff_s=args.backoff_s)
+    print(f"party {args.party_id}: update delivered to "
+          f"{args.host}:{args.port} ({nbytes} framed bytes)")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="one FedKT round over TCP sockets")
+    ap.add_argument("role", choices=["local", "coordinator", "party"])
+    ap.add_argument("--parties", type=int, default=4)
+    ap.add_argument("--partitions", type=int, default=1)
+    ap.add_argument("--subsets", type=int, default=2)
+    ap.add_argument("--n-train", type=int, default=4096)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--engine", default="loop")
+    ap.add_argument("--privacy", default="L0",
+                    choices=["L0", "L1", "L2"])
+    ap.add_argument("--gamma", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7733)
+    ap.add_argument("--parallelism", type=int, default=None,
+                    help="local role: concurrent simulated parties")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-party deadline from round start")
+    ap.add_argument("--min-parties", type=int, default=None,
+                    help="quorum: proceed at the deadline with at "
+                         "least this many updates")
+    ap.add_argument("--drop-students", action="store_true",
+                    help="fold-and-drop updates (constant server "
+                         "memory; RoundResult carries no student "
+                         "states)")
+    ap.add_argument("--retries", type=int, default=8,
+                    help="party role: connect attempts")
+    ap.add_argument("--backoff-s", type=float, default=0.05,
+                    help="party role: base exponential backoff")
+    ap.add_argument("--party-id", type=int, default=0,
+                    help="party role: which silo this process is")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    {"local": run_local, "coordinator": run_coordinator,
+     "party": run_party}[args.role](args)
+
+
+if __name__ == "__main__":
+    main()

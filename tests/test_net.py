@@ -1,0 +1,255 @@
+"""Socket federation: streaming-aggregation bit-identity with the
+serial loop, straggler/quorum dropout semantics, and wire-level frame
+robustness (tests/test_transport.py covers the codec itself)."""
+import socket
+import struct
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedKTConfig
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
+from repro.data.synthetic import tabular_binary
+from repro.federation import (Coordinator, FedKTSession, QuorumError,
+                              SocketTransport)
+from repro.federation.net import ACK, NAK, send_update_frame
+from repro.federation.party import Party
+from repro.models.smallnets import MLP
+
+
+@pytest.fixture(scope="module")
+def data():
+    return tabular_binary(n=512, seed=0)
+
+
+@pytest.fixture(scope="module")
+def learner():
+    return NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=20)
+
+
+L2_CFG = dict(num_parties=3, num_partitions=1, num_subsets=2,
+              num_classes=2, privacy_level="L2", gamma=0.1,
+              query_fraction=0.5, seed=7)
+
+
+@pytest.fixture(scope="module")
+def ref_result(data, learner):
+    """The serial in-process reference round for the shared L2 config."""
+    return FedKTSession(learner, data, FedKTConfig(**L2_CFG),
+                        engine="loop").run()
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _failing_indices(n_parties, n_rows):
+    """Valid shards for all parties except the last, whose out-of-range
+    index makes its local round raise inside the worker."""
+    shard = n_rows // n_parties
+    ix = [np.arange(i * shard, (i + 1) * shard)
+          for i in range(n_parties - 1)]
+    return ix + [np.array([10 ** 9])]
+
+
+class SlowParty(Party):
+    """A party whose local round outlives the deadline."""
+    delay_s = 6.0
+
+    def local_round(self, key, X_public, num_queries, engine):
+        time.sleep(self.delay_s)
+        return super().local_round(key, X_public, num_queries, engine)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity with the serial loop
+# ---------------------------------------------------------------------------
+def test_socket_smoke_two_parties(data, learner):
+    """Tier-1 CI smoke: a 2-party localhost socket round is bit-identical
+    to the serial in-process loop — accuracy, epsilon, student states,
+    and measured wire bytes."""
+    cfg = FedKTConfig(**{**L2_CFG, "num_parties": 2})
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport="socket").run()
+    assert res.accuracy == ref.accuracy
+    assert res.epsilon == ref.epsilon
+    _tree_equal(res.student_states, ref.student_states)
+    assert res.meta["wire_bytes"] == ref.meta["wire_bytes"]
+    assert res.meta["transport"] == "socket"
+    assert res.meta["dropped_parties"] == []
+    assert sorted(res.meta["socket"]["arrived"]) == [0, 1]
+    # the framed bytes in the socket report are the measured per-party
+    # sizes the wire accounting sums
+    assert sum(res.meta["socket"]["framed_bytes"].values()) == \
+        res.meta["wire_bytes"]["updates"]
+
+
+@pytest.mark.parametrize("make_learner", [
+    lambda: NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=20),
+    lambda: RFLearner(num_classes=2, num_trees=3, depth=2),
+    lambda: GBDTLearner(num_rounds=3, depth=2),
+], ids=["nn", "rf", "gbdt"])
+def test_socket_matches_serial_loop(data, make_learner):
+    """Acceptance: the socket session reproduces the serial loop
+    bit-for-bit for every tabular learner kind when all parties
+    respond — whatever order their updates arrive in."""
+    cfg = FedKTConfig(**L2_CFG)
+    lrn = make_learner()
+    ref = FedKTSession(lrn, data, cfg, engine="loop").run()
+    res = FedKTSession(lrn, data, cfg, engine="loop",
+                       transport="socket", parallelism=3).run()
+    assert res.accuracy == ref.accuracy
+    assert res.epsilon == ref.epsilon
+    _tree_equal(res.student_states, ref.student_states)
+    assert res.meta["wire_bytes"] == ref.meta["wire_bytes"]
+
+
+def test_socket_constant_memory_mode(data, learner, ref_result):
+    """retain_students=False folds-and-drops every update: the result
+    still matches the serial loop (the vote histogram IS the state),
+    but no student states are retained."""
+    res = FedKTSession(learner, data, FedKTConfig(**L2_CFG),
+                       engine="loop", transport="socket",
+                       retain_students=False).run()
+    assert res.accuracy == ref_result.accuracy
+    assert res.epsilon == ref_result.epsilon
+    assert res.student_states == []
+    assert res.meta["wire_bytes"] == ref_result.meta["wire_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Straggler / quorum semantics
+# ---------------------------------------------------------------------------
+def test_failed_party_dropped_at_quorum(data, learner, ref_result):
+    """A party that dies mid-round is excluded: the session completes
+    with the quorum's updates and records the dropout in meta."""
+    cfg = FedKTConfig(**L2_CFG)
+    res = FedKTSession(
+        learner, data, cfg, engine="loop",
+        party_indices=_failing_indices(3, len(data["X_train"])),
+        transport=SocketTransport(min_parties=2)).run()
+    assert res.meta["dropped_parties"] == [2]
+    assert 2 in res.meta["socket"]["failed"]
+    assert sorted(res.meta["socket"]["arrived"]) == [0, 1]
+    assert len(res.student_states) == 2
+    # accounting covers only the arrived updates
+    two_thirds = 2 * ref_result.meta["wire_bytes"]["labels"] // 3
+    assert res.meta["wire_bytes"]["labels"] == two_thirds
+    assert res.epsilon is not None and res.epsilon > 0
+
+
+def test_slow_party_dropped_at_deadline(data, learner):
+    """A straggler that outlives deadline_s is dropped once min_parties
+    updates arrived; the round does NOT wait for it."""
+    cfg = FedKTConfig(**L2_CFG)
+    session = FedKTSession(
+        learner, data, cfg, engine="loop",
+        transport=SocketTransport(min_parties=2, deadline_s=3.0))
+    slow = session.parties[2]
+    session.parties[2] = SlowParty(
+        party_id=slow.party_id, X=slow.X, y=slow.y,
+        indices=slow.indices, cfg=slow.cfg, learner=slow.learner,
+        student_learner=slow.student_learner)
+    t0 = time.monotonic()
+    res = session.run()
+    assert time.monotonic() - t0 < SlowParty.delay_s + 15
+    assert res.meta["dropped_parties"] == [2]
+    assert sorted(res.meta["socket"]["arrived"]) == [0, 1]
+
+
+def test_below_quorum_raises(data, learner):
+    """Default quorum is ALL parties: a failed party with no quorum
+    slack is a loud error naming the missing silo, not a silent
+    degradation."""
+    cfg = FedKTConfig(**L2_CFG)
+    with pytest.raises(QuorumError, match=r"missing parties \[2\]"):
+        FedKTSession(
+            learner, data, cfg, engine="loop",
+            party_indices=_failing_indices(3, len(data["X_train"])),
+            transport="socket").run()
+
+
+# ---------------------------------------------------------------------------
+# Wire-level robustness
+# ---------------------------------------------------------------------------
+def _raw_frame(port, payload):
+    with socket.create_connection(("127.0.0.1", port), timeout=10) as s:
+        s.sendall(struct.pack("<I", len(payload)) + payload)
+        return s.recv(1)
+
+
+def test_coordinator_rejects_incompatible_frames(data, learner):
+    """Garbage and old-codec-version frames get a NAK and are recorded,
+    never folded; a well-formed frame from an unknown party is refused
+    too."""
+    coord = Coordinator([0], port=0).start()
+    try:
+        assert _raw_frame(coord.port, b"garbage") == NAK
+        # a pre-version frame: old magic b"FKT1" + plausible tail
+        assert _raw_frame(coord.port,
+                          b"FKT1" + struct.pack("<I", 2) + b"{}") == NAK
+        assert len(coord.errors) == 2
+        assert any("version" in e for e in coord.errors)
+        # unknown party: encode a real update under an id not in round
+        party = Party(party_id=9, X=data["X_train"], y=data["y_train"],
+                      indices=np.arange(64),
+                      cfg=FedKTConfig(**{**L2_CFG, "num_parties": 1}),
+                      learner=learner, student_learner=learner)
+        from repro.federation.codec import encode_update
+        from repro.federation.engines import LoopEngine
+        upd, _ = party.local_round(jax.random.PRNGKey(0),
+                                   data["X_public"], 16, LoopEngine())
+        with pytest.raises(ConnectionError, match="NAK"):
+            send_update_frame("127.0.0.1", coord.port,
+                              encode_update(upd), retries=1)
+        assert coord.updates.empty()
+    finally:
+        coord.stop()
+
+
+def test_client_retries_with_backoff():
+    """The party client survives a coordinator that binds late (the
+    cross-host race), and gives a clear error when it never appears."""
+    with pytest.raises(ConnectionError, match="after 2 attempts"):
+        send_update_frame("127.0.0.1", 1, b"x", retries=2,
+                          backoff_s=0.01)
+
+
+def test_transport_context_manager():
+    """Transports are context managers with idempotent close."""
+    with SocketTransport(min_parties=1) as t:
+        assert t.name == "socket"
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# Fleet scale (scheduled full run)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_fleet_32_parties_streaming(learner):
+    """32 parties stream through one localhost coordinator under the
+    constant-memory fold; result is bit-identical to the serial loop."""
+    fleet_data = tabular_binary(n=4096, seed=1)
+    cfg = FedKTConfig(num_parties=32, num_partitions=1, num_subsets=2,
+                      num_classes=2, privacy_level="L2", gamma=0.1,
+                      query_fraction=0.5, seed=11)
+    # equal shards: one pow2 training bucket for the whole fleet
+    rows = (len(fleet_data["X_train"]) // 32) * 32
+    ix = np.array_split(np.arange(rows), 32)
+    ref = FedKTSession(learner, fleet_data, cfg, engine="loop",
+                       party_indices=ix).run()
+    res = FedKTSession(learner, fleet_data, cfg, engine="loop",
+                       party_indices=ix, retain_students=False,
+                       transport=SocketTransport(parallelism=8)).run()
+    assert res.accuracy == ref.accuracy
+    assert res.epsilon == ref.epsilon
+    assert res.student_states == []
+    assert res.meta["wire_bytes"] == ref.meta["wire_bytes"]
+    assert res.meta["num_updates"] == 32
+    assert res.meta["dropped_parties"] == []

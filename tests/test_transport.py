@@ -1,5 +1,8 @@
-"""Transport layer: codec round-trips, wire accounting, and
-cross-transport bit-identity of the federation round."""
+"""Transport layer: codec round-trips, versioned-frame rejection, wire
+accounting, cross-transport bit-identity of the federation round, and
+the worker-cleanup contract when a party fails mid-round."""
+import multiprocessing
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +13,8 @@ from repro.configs.base import FedKTConfig
 from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.data.synthetic import tabular_binary
 from repro.federation import (FedKTSession, InProcessTransport, PartyUpdate,
-                              ThreadTransport, codec, get_transport,
+                              SubprocessTransport, ThreadTransport,
+                              TokenLabels, codec, get_transport,
                               pytree_bytes)
 from repro.models.smallnets import MLP
 
@@ -113,6 +117,62 @@ def test_codec_rejects_bad_input():
         codec.encode({1: np.zeros(1)})
     with pytest.raises(ValueError):
         codec.decode_update(codec.encode({"w": np.zeros(1)}))
+
+
+def test_codec_version_header():
+    """Every frame leads with magic + version; a frame speaking another
+    version is refused with an error naming both versions, and the
+    pre-versioning wire format (magic ``FKT1``) is rejected rather than
+    misread."""
+    buf = codec.encode({"w": np.zeros((2,), np.float32)})
+    assert buf[:3] == codec.MAGIC and buf[3] == codec.VERSION
+    tampered = buf[:3] + bytes([codec.VERSION + 1]) + buf[4:]
+    with pytest.raises(ValueError, match=f"v{codec.VERSION + 1}"):
+        codec.decode(tampered)
+    with pytest.raises(ValueError, match="version"):
+        codec.decode(b"FKT1" + buf[4:])
+
+
+def test_codec_empty_gap_trace():
+    """A party whose queries produced no clean gaps (e.g. zero teachers
+    answered) still round-trips: the empty trace survives with shape and
+    dtype intact and prices at zero payload bytes."""
+    upd = PartyUpdate(party_id=3,
+                      student_states=[{"w": np.ones((2, 2), np.float32)}],
+                      vote_gaps=np.zeros((0,), np.float64),
+                      num_examples=5, meta={"num_teachers": 0})
+    dec = codec.decode_update(codec.encode_update(upd))
+    assert dec.vote_gaps.shape == (0,)
+    assert dec.vote_gaps.dtype == np.float64
+    assert dec.wire_bytes() == upd.wire_bytes() == \
+        pytree_bytes(upd.student_states)
+
+
+def test_codec_zero_length_label_payload():
+    """An empty vote answer (query_fraction rounding to zero on a tiny
+    shard) frames, prices, and decodes cleanly."""
+    msg = TokenLabels(party_id=1, labels=np.zeros((0,), np.int32))
+    buf = codec.encode_labels(msg)
+    assert codec.labels_encoded_nbytes(msg) == len(buf)
+    dec = codec.decode_labels(buf)
+    assert dec.labels.shape == (0,) and dec.labels.dtype == np.int32
+    assert dec.party_id == 1 and msg.wire_bytes() == 0
+
+
+def test_codec_truncated_frames_always_raise():
+    """EVERY strict prefix of a frame raises ValueError — truncation in
+    the magic, the version, the header length, the header JSON, or the
+    payload is detected, never mis-parsed into a wrong tree."""
+    upd = PartyUpdate(party_id=0,
+                      student_states=[{"w": np.arange(4, dtype=np.float32)}],
+                      vote_gaps=np.arange(3, dtype=np.float64),
+                      num_examples=9, meta={"num_teachers": 1})
+    buf = codec.encode_update(upd)
+    for n in range(len(buf)):
+        with pytest.raises(ValueError):
+            codec.decode(buf[:n])
+    # the untruncated frame still decodes (the loop above is strict)
+    assert codec.decode_update(buf).party_id == 0
 
 
 @settings(max_examples=25, deadline=None)
@@ -230,9 +290,55 @@ def test_get_transport_registry():
     assert get_transport("inprocess").name == "inprocess"
     assert get_transport("thread", 4).parallelism == 4
     assert get_transport("subprocess").name == "subprocess"
+    assert get_transport("socket", 4).name == "socket"
     t = ThreadTransport(parallelism=2)
     assert get_transport(t) is t
     with pytest.raises(ValueError):
         get_transport("carrier-pigeon")
     with pytest.raises(ValueError):
         get_transport(InProcessTransport(), parallelism=2)
+
+
+# ---------------------------------------------------------------------------
+# Cleanup contract
+# ---------------------------------------------------------------------------
+def test_transports_are_context_managers():
+    """Every transport supports ``with`` and idempotent close."""
+    for name in ("inprocess", "thread", "subprocess", "socket"):
+        with get_transport(name) as t:
+            assert t.name == name
+        t.close()
+
+
+def test_subprocess_cleanup_on_party_failure(data, learner):
+    """Regression: a party that raises mid-round must not leak worker
+    interpreters.  The old executor-based round kept the remaining
+    spawned processes alive (still training dropped parties) after the
+    session had already failed; the pool is now terminated in-place."""
+    cfg = FedKTConfig(**L2_CFG)
+    shards = [np.arange(0, 100), np.arange(100, 200),
+              np.array([10 ** 9])]          # out-of-range: party 2 dies
+    session = FedKTSession(learner, data, cfg, engine="loop",
+                           party_indices=shards,
+                           transport="subprocess", parallelism=3)
+    before = set(multiprocessing.active_children())
+    with pytest.raises(IndexError):
+        session.run()
+    # terminate() + join() ran in the round's finally: no spawned
+    # worker outlives the failure
+    leaked = [p for p in multiprocessing.active_children()
+              if p not in before]
+    assert leaked == []
+
+
+def test_thread_cleanup_on_party_failure(data, learner):
+    """The thread transport's failed round raises promptly (queued
+    parties are cancelled) and the session object stays reusable."""
+    cfg = FedKTConfig(**L2_CFG)
+    shards = [np.array([10 ** 9]), np.arange(0, 100),
+              np.arange(100, 200)]
+    with ThreadTransport(parallelism=1) as transport:
+        session = FedKTSession(learner, data, cfg, engine="loop",
+                               party_indices=shards, transport=transport)
+        with pytest.raises(IndexError):
+            session.run()

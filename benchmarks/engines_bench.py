@@ -26,6 +26,12 @@ histogram (retain_students=False — constant memory in the party
 count).  The row records the measured framed bytes that crossed the
 sockets and the streamed round's wall-clock.
 
+A fifth, heterogeneous row (het_mixed_3way) federates one rf, one
+gbdt, and one nn silo through per-party bindings — trees on the vmap
+engine, the MLP on the loop — and records the measured framed wire
+bytes PER MODEL FAMILY: a mixed fleet is priced per family, not per
+average party.
+
 All engines and transports run the identical protocol and PRNG
 schedule.  Writes the headline numbers to BENCH_federation_engines.json
 at the repo root.
@@ -219,6 +225,71 @@ def bench_fleet_socket(repeats):
     return row
 
 
+def het_setup():
+    from repro.core.learners import GBDTLearner
+    from repro.federation import PartyBinding
+    data = tabular_binary(n=6000, seed=0)
+    bindings = [
+        PartyBinding(RFLearner(num_classes=2, num_trees=16, depth=5),
+                     engine="vmap"),
+        PartyBinding(GBDTLearner(num_rounds=16, depth=4),
+                     engine="vmap"),
+        PartyBinding(NNLearner(MLP(num_features=14, num_classes=2,
+                                   hidden=32), num_classes=2,
+                               steps=200)),
+    ]
+    final = NNLearner(MLP(num_features=14, num_classes=2, hidden=32),
+                      num_classes=2, steps=200)
+    cfg = FedKTConfig(**{**QUICKSTART, "num_parties": 3})
+    return bindings, final, data, cfg, \
+        "rf(trees=16,d=5) + gbdt(rounds=16,d=4) + nn(MLP-32,steps=200)"
+
+
+def bench_het_mixed(repeats):
+    """Heterogeneous row: one 3-party rf + gbdt + nn round through
+    per-party bindings (trees on the vmap engine, nn on the loop) over
+    the thread transport.  The headline numbers are the MEASURED
+    codec-framed wire bytes per model family — tree students ship
+    split/leaf tables, the MLP ships dense weights, and a mixed fleet
+    is priced per family, not per average party."""
+    bindings, final, data, cfg, desc = het_setup()
+
+    def one_run():
+        return FedKTSession(bindings, data, cfg, final_learner=final,
+                            transport="thread",
+                            parallelism=cfg.num_parties).run()
+
+    t0 = time.time()
+    res = one_run()
+    cold = time.time() - t0
+    warms = []
+    for _ in range(repeats):
+        t0 = time.time()
+        res = one_run()
+        warms.append(time.time() - t0)
+    wire = res.meta["wire_bytes"]
+    return {
+        "config": {"num_parties": cfg.num_parties,
+                   "num_partitions": cfg.num_partitions,
+                   "num_subsets": cfg.num_subsets,
+                   "learner": desc, "engine": res.meta["engine"],
+                   "party_bindings": res.meta["party_bindings"],
+                   "transport": "thread", "n_train": len(data["X_train"])},
+        "cold_s": round(cold, 3),
+        "warm_s": round(sorted(warms)[len(warms) // 2], 3),
+        "warm_runs_s": [round(w, 3) for w in warms],
+        "accuracy": round(res.accuracy, 4),
+        "wire_bytes": {
+            "updates_measured": wire["updates"],        # codec-framed truth
+            "updates_payload": wire["updates_payload"],
+            "by_learner_kind": wire["by_learner_kind"],
+            "per_party": {str(k): v
+                          for k, v in wire["per_party"].items()},
+            "labels": wire["labels"],
+        },
+    }
+
+
 def bench(repeats=REPEATS, write=True, names=None):
     rec = {"repeats": repeats, "benches": {}}
     for name in (names or SETUPS):
@@ -227,6 +298,7 @@ def bench(repeats=REPEATS, write=True, names=None):
         rec["benches"]["nn_parallel_parties"] = bench_parallel_parties(
             nn_setup, repeats)
         rec["benches"]["nn_fleet_socket"] = bench_fleet_socket(repeats)
+        rec["benches"]["het_mixed_3way"] = bench_het_mixed(repeats)
     if write:
         with open(OUT, "w") as f:
             json.dump(rec, f, indent=1)
@@ -251,6 +323,14 @@ def run(em, quick=True):
         if "wire_bytes" in row:
             em.emit("engines", f"{name}/wire", "updates_measured_bytes",
                     row["wire_bytes"]["updates_measured"])
+            for kind, nbytes in sorted(
+                    row["wire_bytes"].get("by_learner_kind",
+                                          {}).items()):
+                em.emit("engines", f"{name}/wire/{kind}",
+                        "framed_bytes", nbytes)
+        if "warm_s" in row:        # single-variant rows (het_mixed_3way)
+            em.emit("engines", name, "warm_s", row["warm_s"])
+            em.emit("engines", name, "acc", row["accuracy"])
 
 
 if __name__ == "__main__":

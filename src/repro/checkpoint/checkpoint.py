@@ -50,7 +50,6 @@ def restore(path: str, like):
     z = np.load(path if path.endswith(".npz") else path + ".npz")
     flat = dict(z)
 
-    idx = {"i": 0}
     paths = []
 
     def collect(kp, leaf):

@@ -8,7 +8,7 @@ are selectable via ``--arch <id>`` in every launcher.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -97,7 +97,8 @@ class ModelConfig:
     # ----- derived -----
     @property
     def head_dim_(self) -> int:
-        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+        return (self.head_dim if self.head_dim
+                else self.d_model // self.num_heads)
 
     @property
     def attention_free(self) -> bool:

@@ -15,13 +15,12 @@ Three step kinds, mirroring Algorithm 1 at datacenter scale:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.core.voting import token_teacher_vote
 from repro.models import Model
 from repro.optim import clip_by_global_norm, get as get_opt, warmup_cosine

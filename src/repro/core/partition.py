@@ -10,7 +10,7 @@ Two levels:
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

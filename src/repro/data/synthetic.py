@@ -15,7 +15,7 @@ All return dicts with train/public/test splits following the paper
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -1,6 +1,16 @@
 """Federation API: FedKT's one-round protocol, decoupled from execution.
 
     Party / Server / FedKTSession  — the protocol (who sends what, once)
+    bindings.PartyBinding           — what ONE party brings to a round:
+                                      its learner, student learner, and
+                                      engine.  A session takes a single
+                                      learner (homogeneous shorthand —
+                                      identical bindings for every
+                                      party) or one binding per party
+                                      (heterogeneous: rf + gbdt + nn in
+                                      one ensemble; the integer (T, U)
+                                      vote layout is the only
+                                      cross-party contract)
     engines.LoopEngine / VmapEngine / LMEngine
                                     — how teachers train and vote
                                       (pluggable; "lm" is the sharded
@@ -31,6 +41,9 @@ worker processes, or TCP sockets with unchanged seeds.
 """
 from repro.federation import codec  # noqa: F401
 from repro.federation.aggregate import StreamingVoteAggregate  # noqa: F401
+from repro.federation.bindings import (PartyBinding,  # noqa: F401
+                                       ResolvedBinding, learner_kind,
+                                       register_learner_kind)
 from repro.federation.engines import (Engine, LMEngine,  # noqa: F401
                                       LoopEngine, VmapEngine, get_engine)
 from repro.federation.messages import (PartyUpdate,  # noqa: F401

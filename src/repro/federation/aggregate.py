@@ -33,6 +33,7 @@ from repro.configs.base import FedKTConfig
 from repro.core import privacy as P
 from repro.core.voting import VoteResult, finalize_vote
 from repro.federation import codec
+from repro.federation.bindings import learner_kind
 from repro.federation.messages import (LABEL_BYTES, PartyUpdate,
                                        TokenLabels)
 
@@ -44,19 +45,80 @@ class StreamingVoteAggregate:
     as each update lands (socket transport) or over a finished list
     (every other transport) — both paths are the same fold, so there is
     exactly one aggregation implementation in the codebase.
+
+    Heterogeneity: ``bindings`` maps party_id -> ResolvedBinding, so a
+    mixed-learner round folds each arriving update with THAT party's
+    student learner and engine.  Integer count-folding commutes across
+    learner kinds — the (T, U) vote layout is the only cross-party
+    contract, and it is enforced here: the first folded update fixes
+    the layout, and any later update whose vote-unit count T (per
+    example vs per token) or class count U disagrees is refused with an
+    error naming both parties, never broadcast or truncated.
     """
 
     def __init__(self, cfg: FedKTConfig, student_learner, engine, Xq, *,
-                 retain_students: bool = True):
+                 retain_students: bool = True, bindings=None):
         self.cfg = cfg
         self.student_learner = student_learner
         self.engine = engine
         self.Xq = Xq
         self.retain_students = retain_students
+        self.bindings = dict(bindings) if bindings else {}
         self.counts = None                  # (T, U) int32 running histogram
+        self._layout = None                 # (T, U) fixed by first update
+        self._layout_party: Dict[str, Any] = {}  # who fixed it, and how
         self._l2_eps: Dict[int, float] = {}   # party_id -> Thm 3 epsilon
         self._students: Dict[int, Any] = {}
-        self._meta: Dict[int, Dict[str, int]] = {}
+        self._meta: Dict[int, Dict[str, Any]] = {}
+
+    def _binding_for(self, pid: int, update: PartyUpdate):
+        """(student_learner, engine, kind) for one arriving update:
+        the party's own binding when the session registered one, else
+        the session-wide pair.  A declared wire kind that contradicts
+        the binding is a misrouted or mislabeled update — refuse it
+        before running the wrong model over its states."""
+        b = self.bindings.get(pid)
+        lrn = b.student_learner if b is not None else self.student_learner
+        eng = b.engine if b is not None else self.engine
+        bound_kind = learner_kind(lrn)
+        if update.learner_kind is not None \
+                and update.learner_kind != bound_kind:
+            raise ValueError(
+                f"party {pid} declares learner kind "
+                f"{update.learner_kind!r} but the session binds "
+                f"{bound_kind!r} for it — refusing to fold states "
+                f"under the wrong learner")
+        return lrn, eng, bound_kind
+
+    def _check_layout(self, pid: int, kind: str, contrib) -> None:
+        """The cross-party vote contract: every party's contribution
+        must match the (T, U) layout the first arrival fixed.  T
+        differs when parties vote in different units (U vote units per
+        example for tabular learners vs per TOKEN for LMs); U differs
+        when class spaces disagree.  Either way the integer fold would
+        silently broadcast or crash deep in jnp — name both parties
+        instead."""
+        shape = tuple(int(d) for d in contrib.shape)
+        if len(shape) != 2 or shape[1] != self.cfg.num_classes:
+            raise ValueError(
+                f"party {pid} ({kind}) contributes vote counts of "
+                f"shape {shape}, expected (T, num_classes="
+                f"{self.cfg.num_classes})")
+        if self._layout is None:
+            self._layout = shape
+            self._layout_party = {"pid": pid, "kind": kind}
+            return
+        if shape != self._layout:
+            first = self._layout_party
+            nq = max(1, len(self.Xq))
+            raise ValueError(
+                f"vote-layout mismatch: party {pid} ({kind}) "
+                f"contributes {shape[0]} vote units x {shape[1]} "
+                f"classes ({shape[0] // nq} unit(s)/query), but party "
+                f"{first['pid']} ({first['kind']}) fixed the round "
+                f"layout at {self._layout[0]} x {self._layout[1]} "
+                f"({self._layout[0] // nq} unit(s)/query) — per-token "
+                f"and per-example voters cannot share a histogram")
 
     # -- folding ----------------------------------------------------------
     def add(self, update: PartyUpdate) -> None:
@@ -64,9 +126,11 @@ class StreamingVoteAggregate:
         pid = int(update.party_id)
         if pid in self._meta:
             raise ValueError(f"duplicate update from party {pid}")
-        contrib = self.engine.student_vote_counts(
-            self.student_learner, update.student_states, self.Xq,
+        lrn, eng, kind = self._binding_for(pid, update)
+        contrib = eng.student_vote_counts(
+            lrn, update.student_states, self.Xq,
             self.cfg.num_classes, consistent=self.cfg.consistent_voting)
+        self._check_layout(pid, kind, contrib)
         self.counts = contrib if self.counts is None \
             else self.counts + contrib
         if self.cfg.privacy_level == "L2":
@@ -79,6 +143,7 @@ class StreamingVoteAggregate:
             self._students[pid] = update.student_states
         nlabels = int(update.meta["num_query_labels"])
         self._meta[pid] = {
+            "learner_kind": kind,
             "num_examples": int(update.num_examples),
             "encoded_bytes": int(update.meta["encoded_bytes"]),
             "payload_bytes": int(update.wire_bytes()),
@@ -129,18 +194,31 @@ class StreamingVoteAggregate:
         return [self._students[pid] for pid in self.party_ids] \
             if self.retain_students else []
 
-    def wire_meta(self) -> Dict[str, int]:
+    def wire_meta(self) -> Dict[str, Any]:
         """The session's wire_bytes block, summed over arrived parties
-        (order-independent integer sums — identical to the batch path)."""
-        rows = self._meta.values()
+        (order-independent integer sums — identical to the batch path).
+        ``per_party`` breaks the measured framed bytes down by party id
+        and ``by_learner_kind`` by model family — in a heterogeneous
+        round the families ship very differently-sized states, and both
+        views are needed to price a mixed fleet."""
+        rows = self._meta
+        by_kind: Dict[str, int] = {}
+        for r in rows.values():
+            k = r["learner_kind"]
+            by_kind[k] = by_kind.get(k, 0) + r["encoded_bytes"]
         return {
-            "updates": sum(r["encoded_bytes"] for r in rows),
-            "updates_payload": sum(r["payload_bytes"] for r in rows),
+            "updates": sum(r["encoded_bytes"] for r in rows.values()),
+            "updates_payload": sum(r["payload_bytes"]
+                                   for r in rows.values()),
             "labels": sum(r["num_query_labels"]
-                          for r in rows) * LABEL_BYTES,
-            "labels_framed": sum(r["labels_framed"] for r in rows),
+                          for r in rows.values()) * LABEL_BYTES,
+            "labels_framed": sum(r["labels_framed"]
+                                 for r in rows.values()),
+            "per_party": {pid: rows[pid]["encoded_bytes"]
+                          for pid in sorted(rows)},
+            "by_learner_kind": by_kind,
         }
 
-    def party_meta(self) -> Dict[int, Dict[str, int]]:
+    def party_meta(self) -> Dict[int, Dict[str, Any]]:
         """Per-party accounting scalars, keyed by party id."""
         return {pid: dict(row) for pid, row in self._meta.items()}

@@ -1,0 +1,148 @@
+"""Per-party learner/engine bindings: heterogeneous ensembles in one
+session.
+
+FedKT's model-agnosticism claim is that ANY classification model can be
+a party's learner — the vote layout is integer counts over (vote unit,
+class), so a hospital's gradient-boosted trees, a bank's MLP, and a
+lab's LM can ensemble in the same round.  A ``PartyBinding`` is what a
+single party brings to the session: its teacher learner, its student
+learner, its execution engine, and nothing else — everything
+cross-party (the query set, the vote histogram, the privacy
+accounting) stays session-global.
+
+The homogeneous shorthand ``FedKTSession(learner, data, cfg,
+engine=...)`` resolves to ONE binding shared by every party, so the
+legacy constructor is the n-identical-bindings special case and stays
+seed-for-seed identical to its pre-binding behavior (test-enforced in
+tests/test_federation.py).  Heterogeneous sessions pass a sequence of
+bindings instead of a learner:
+
+    FedKTSession([PartyBinding(RFLearner(...)),
+                  PartyBinding(GBDTLearner(...), engine="vmap"),
+                  PartyBinding(NNLearner(...), engine="vmap")],
+                 data, cfg, final_learner=NNLearner(...))
+
+The only cross-party contract is the (T, U) vote layout: every party's
+server-side student votes must produce the same number of vote units T
+(per example for tabular learners, per TOKEN for the LM path) over the
+same class count U.  ``StreamingVoteAggregate`` enforces this at fold
+time with an error naming both parties (federation/aggregate.py), so a
+binding mix that cannot share a histogram fails loudly instead of
+broadcasting or truncating.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.federation.engines import Engine, get_engine
+
+# Learner kind names, by class name so third-party learners can
+# register without importing core.learners here (and so unpickled /
+# decoded updates can be validated by name alone).  The kind a
+# PartyUpdate declares on the wire is the kind of its STUDENT learner —
+# that is the model the server must run to fold the party's votes.
+_KIND_BY_CLASS: Dict[str, str] = {
+    "NNLearner": "nn",
+    "RFLearner": "rf",
+    "GBDTLearner": "gbdt",
+    "LMLearner": "lm",
+}
+
+
+def register_learner_kind(cls_name: str, kind: str) -> None:
+    """Names a learner class for wire-level kind validation (a custom
+    learner only needs this if it wants a kind shorter than its class
+    name)."""
+    _KIND_BY_CLASS[cls_name] = kind
+
+
+def learner_kind(learner: Any) -> str:
+    """Short kind name for a learner instance ("nn" | "rf" | "gbdt" |
+    "lm" | the lowercased class name for unregistered learners)."""
+    name = type(learner).__name__
+    return _KIND_BY_CLASS.get(name, name.lower())
+
+
+@dataclass(frozen=True)
+class PartyBinding:
+    """What ONE party brings to a FedKT session.
+
+    learner         : the party's teacher learner.
+    student_learner : defaults to ``learner`` — the model distilled from
+                      the party's teacher votes and shipped in its
+                      PartyUpdate (the kind the server folds).
+    engine          : "loop" | "vmap" | "lm" | an Engine instance, or
+                      None to inherit the session's ``engine=`` default.
+                      The engine is party-local: it drives this party's
+                      teacher fits AND the server-side fold of this
+                      party's student votes, so a tree party can ride
+                      the vmap engine while an LM party rides "lm" in
+                      the same round.
+    """
+    learner: Any
+    student_learner: Any = None
+    engine: Any = None
+
+    def resolve(self, default_engine="loop") -> "ResolvedBinding":
+        """Concrete (learner, student_learner, engine) triple; None
+        fields inherit the session defaults."""
+        return ResolvedBinding(
+            learner=self.learner,
+            student_learner=self.student_learner or self.learner,
+            engine=get_engine(self.engine if self.engine is not None
+                              else default_engine))
+
+
+@dataclass(frozen=True)
+class ResolvedBinding:
+    """A PartyBinding with every default filled in (engine is an
+    instance, student_learner is never None)."""
+    learner: Any
+    student_learner: Any
+    engine: Engine
+
+    @property
+    def kind(self) -> str:
+        """The wire-declared learner kind (of the student learner —
+        the model the server runs)."""
+        return learner_kind(self.student_learner)
+
+
+def resolve_bindings(learner_or_bindings: Any, *, student_learner=None,
+                     engine="loop", num_parties: int,
+                     final_learner: Optional[Any] = None):
+    """The session's binding resolution: one shared binding from the
+    homogeneous shorthand, or one per party from an explicit sequence.
+
+    Returns (bindings list, resolved final_learner).  The final learner
+    defaults to the first binding's teacher learner — in a homogeneous
+    session that is exactly the legacy ``final_learner or learner``
+    default.
+    """
+    if isinstance(learner_or_bindings, (list, tuple)):
+        if student_learner is not None:
+            raise ValueError(
+                "student_learner= is the homogeneous shorthand; with "
+                "per-party bindings, set each PartyBinding's "
+                "student_learner instead")
+        if len(learner_or_bindings) != num_parties:
+            raise ValueError(
+                f"got {len(learner_or_bindings)} party bindings for "
+                f"cfg.num_parties={num_parties}")
+        bindings = []
+        for i, b in enumerate(learner_or_bindings):
+            if not isinstance(b, PartyBinding):
+                raise TypeError(f"binding {i} is {type(b).__name__}, "
+                                f"expected PartyBinding")
+            bindings.append(b.resolve(default_engine=engine))
+    else:
+        if learner_or_bindings is None:
+            raise ValueError("FedKTSession needs a learner or a "
+                             "sequence of PartyBinding")
+        shared = PartyBinding(learner_or_bindings,
+                              student_learner=student_learner).resolve(
+                                  default_engine=engine)
+        bindings = [shared] * num_parties
+    final = final_learner or bindings[0].learner
+    return bindings, final

@@ -186,8 +186,12 @@ def _update_tree(update: PartyUpdate):
 
 
 def _update_extra(update: PartyUpdate) -> Dict[str, Any]:
+    # learner_kind rides in the header: a heterogeneous server must
+    # know WHICH learner family the decoded states belong to before it
+    # can run them (bindings.learner_kind; None = undeclared)
     return {"kind": "PartyUpdate", "party_id": int(update.party_id),
             "num_examples": int(update.num_examples),
+            "learner_kind": update.learner_kind,
             "meta": dict(update.meta)}
 
 
@@ -206,6 +210,7 @@ def decode_update(buf: bytes) -> PartyUpdate:
                        student_states=tree["student_states"],
                        vote_gaps=tree["vote_gaps"],
                        num_examples=header["num_examples"],
+                       learner_kind=header.get("learner_kind"),
                        meta=dict(header["meta"]))
 
 

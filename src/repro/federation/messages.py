@@ -57,11 +57,22 @@ def label_wire_bytes(num_queries: int) -> int:
 
 @dataclass
 class PartyUpdate:
-    """Everything a party sends to the server in the single round."""
+    """Everything a party sends to the server in the single round.
+
+    ``learner_kind`` names the STUDENT learner family the states belong
+    to ("nn" | "rf" | "gbdt" | "lm" — bindings.learner_kind): in a
+    heterogeneous session each party may bring a different model, so a
+    decoded update must say which learner the server has to run to fold
+    its votes.  The aggregate cross-checks it against the party's
+    session binding and refuses a mismatch (federation/aggregate.py).
+    None means "undeclared" (hand-built or pre-binding updates) and
+    skips the check.
+    """
     party_id: int
     student_states: List[Any]          # s trained student pytrees
     vote_gaps: np.ndarray              # concat clean top-2 gaps (L2 acct)
     num_examples: int                  # local dataset size (for metrics)
+    learner_kind: Optional[str] = None  # student-learner family name
     meta: Dict[str, Any] = field(default_factory=dict)
 
     def wire_bytes(self) -> int:

@@ -55,7 +55,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.federation.codec import decode_update, encode_update
+from repro.federation.codec import encode_update
 from repro.federation.messages import PartyUpdate
 from repro.federation.transport import TransportBase, _decode_annotated
 
@@ -116,13 +116,15 @@ def send_update_frame(host: str, port: int, payload: bytes, *,
 
 
 def run_party_client(host: str, port: int, party, key, X_public,
-                     num_queries: int, engine, *, retries: int = 8,
+                     num_queries: int, engine=None, *, retries: int = 8,
                      backoff_s: float = 0.05,
                      io_timeout_s: float = 60.0) -> int:
     """The remote-silo entry point: run this party's local round and
     ship the one resulting PartyUpdate to the coordinator.  Returns the
     framed byte count (what actually crossed the wire, minus the 4-byte
-    length prefix).  See launch/federate.py for the CLI wrapper."""
+    length prefix).  ``engine=None`` runs the party's own bound engine
+    — in a mixed fleet each silo's binding decides.  See
+    launch/federate.py for the CLI wrapper."""
     upd, _ = party.local_round(key, X_public, num_queries, engine)
     payload = encode_update(upd)
     send_update_frame(host, port, payload, retries=retries,

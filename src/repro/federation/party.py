@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.configs.base import FedKTConfig
 from repro.core.partition import subsets_of_partition
-from repro.federation.engines import Engine
+from repro.federation.bindings import learner_kind
+from repro.federation.engines import Engine, get_engine
 from repro.federation.messages import LABEL_BYTES, PartyUpdate
 
 
@@ -24,7 +25,14 @@ from repro.federation.messages import LABEL_BYTES, PartyUpdate
 class Party:
     """One silo.  ``indices`` selects its local shard of the (conceptually
     party-private) training arrays; in a deployed setting X/y would be
-    the silo's own storage and ``indices`` the identity."""
+    the silo's own storage and ``indices`` the identity.
+
+    The learner/student_learner/engine triple is the party's BINDING
+    (federation/bindings.py): each silo brings its own model family and
+    execution engine to the round, so one session can ensemble rf, gbdt,
+    nn, and lm parties.  ``engine`` may be None — ``local_round`` then
+    needs an explicit engine argument (the pre-binding calling
+    convention, kept for the transports and direct callers)."""
     party_id: int
     X: np.ndarray
     y: np.ndarray
@@ -32,6 +40,7 @@ class Party:
     cfg: FedKTConfig
     learner: Any
     student_learner: Any
+    engine: Any = None
 
     @property
     def num_examples(self) -> int:
@@ -62,14 +71,27 @@ class Party:
         return self._key_schedule(key, cfg.num_partitions,
                                   cfg.num_subsets)[3]
 
-    def local_round(self, key, X_public, num_queries: int, engine: Engine):
+    def local_round(self, key, X_public, num_queries: int,
+                    engine: Engine = None):
         """Runs the party side of the single round.
 
         Returns (PartyUpdate, advanced key).  Key threading matches the
         legacy ``run_fedkt`` loop split-for-split, so results are
         seed-for-seed reproducible across API versions and engines.
+
+        ``engine=None`` uses the party's OWN bound engine — the
+        heterogeneous path, where each silo's binding decides how its
+        teachers train; an explicit engine overrides the binding (the
+        transports pass None so every party runs its own).
         """
         cfg = self.cfg
+        if engine is None:
+            if self.engine is None:
+                raise ValueError(
+                    f"party {self.party_id} has no bound engine; pass "
+                    f"engine= to local_round or bind one at construction")
+            engine = self.engine
+        engine = get_engine(engine)
         s, t, u = cfg.num_partitions, cfg.num_subsets, cfg.num_classes
         Xq = X_public[:num_queries]
         plan = subsets_of_partition(self.indices, s, t,
@@ -104,6 +126,10 @@ class Party:
                              student_states=students,
                              vote_gaps=np.concatenate(gaps),
                              num_examples=self.num_examples,
+                             # the STUDENT family: what the server must
+                             # run to fold this party's votes
+                             learner_kind=learner_kind(
+                                 self.student_learner),
                              meta={"num_teachers": s * t,
                                    # label answers are one vote unit per
                                    # LABEL (= per token on the LM path,

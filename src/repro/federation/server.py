@@ -25,10 +25,17 @@ from repro.federation.messages import PartyUpdate
 
 
 class Server:
-    def __init__(self, cfg: FedKTConfig, student_learner, final_learner):
+    def __init__(self, cfg: FedKTConfig, student_learner, final_learner,
+                 *, bindings=None):
+        """``bindings`` (party_id -> ResolvedBinding) is the
+        heterogeneous contract: the fold runs each arriving update's
+        states under THAT party's student learner and engine.  Without
+        it, the session-wide (student_learner, engine) pair applies to
+        every party — the homogeneous shorthand."""
         self.cfg = cfg
         self.student_learner = student_learner
         self.final_learner = final_learner
+        self.bindings = bindings
 
     def make_aggregate(self, X_public, num_queries: int,
                        engine: Engine = None, *,
@@ -36,10 +43,13 @@ class Server:
                        ) -> StreamingVoteAggregate:
         """A fresh per-round fold.  ``engine`` decides how each party's
         s student models answer the query set (serial loop vs one
-        stacked predict); defaults to the serial reference engine."""
+        stacked predict); defaults to the serial reference engine.
+        Per-party bindings, when registered, override both the learner
+        and the engine for their party's updates."""
         return StreamingVoteAggregate(
             self.cfg, self.student_learner, engine or LoopEngine(),
-            X_public[:num_queries], retain_students=retain_students)
+            X_public[:num_queries], retain_students=retain_students,
+            bindings=self.bindings)
 
     def finalize(self, key, agg: StreamingVoteAggregate):
         """Vote over the finished histogram + final distillation.

@@ -10,6 +10,15 @@ every mode).  One session == one round == one result:
     session = FedKTSession(learner, data, cfg, engine="vmap")
     result = session.run()        # RoundResult
 
+    # heterogeneous silos: each party brings its OWN learner and engine
+    # (a PartyBinding) — the vote layout is learner-agnostic integer
+    # counts, so rf + gbdt + nn ensemble in one round
+    from repro.federation.bindings import PartyBinding
+    FedKTSession([PartyBinding(RFLearner(num_classes=2)),
+                  PartyBinding(GBDTLearner(), engine="vmap"),
+                  PartyBinding(nn_learner, engine="vmap")],
+                 data, cfg, final_learner=nn_learner).run()
+
     # cross-process silos: each party's round in its own interpreter,
     # fanned out over ``parallelism`` workers
     FedKTSession(learner, data, cfg, transport="subprocess",
@@ -48,6 +57,7 @@ import numpy as np
 from repro.configs.base import FedKTConfig
 from repro.core.learners import accuracy
 from repro.core.partition import dirichlet_partition
+from repro.federation.bindings import resolve_bindings
 from repro.federation.engines import get_engine
 from repro.federation.messages import RoundResult
 from repro.federation.party import Party
@@ -81,8 +91,17 @@ def query_budget(cfg: FedKTConfig, num_public: int):
 class FedKTSession:
     """One FedKT round over in-process array data.
 
+    learner: a single Learner (the homogeneous shorthand — every party
+        gets the same binding, exactly the pre-binding behavior) OR a
+        sequence of ``bindings.PartyBinding``, one per party, for
+        heterogeneous ensembles (each silo brings its own learner and
+        engine; the (T, U) integer vote layout is the only cross-party
+        contract, enforced at aggregation time).
     data: dict with X_train/y_train/X_public/X_test/y_test arrays.
-    engine: "loop" | "vmap" | an engines.Engine instance.
+    engine: "loop" | "vmap" | an engines.Engine instance — the default
+        engine for bindings that don't name their own.
+    final_learner: trains on the server's voted labels; defaults to the
+        (first binding's) teacher learner.
     transport: "inprocess" | "thread" | "subprocess" | "socket" | a
         transport.Transport instance — where the party rounds run and
         how their updates cross the party/server boundary.  Pass a
@@ -103,9 +122,14 @@ class FedKTSession:
                  final_learner=None, engine="loop", party_indices=None,
                  transport="inprocess", parallelism=None,
                  retain_students=True):
-        self.learner = learner
-        self.student_learner = student_learner or learner
-        self.final_learner = final_learner or learner
+        self.bindings, self.final_learner = resolve_bindings(
+            learner, student_learner=student_learner, engine=engine,
+            num_parties=cfg.num_parties, final_learner=final_learner)
+        # the homogeneous shorthand's session-wide fields (every
+        # binding is the same one there); heterogeneous sessions should
+        # read self.bindings instead
+        self.learner = self.bindings[0].learner
+        self.student_learner = self.bindings[0].student_learner
         self.data = data
         self.cfg = cfg
         self.engine = get_engine(engine)
@@ -118,10 +142,13 @@ class FedKTSession:
                                                 cfg.beta, cfg.seed)
         self.parties = [
             Party(party_id=i, X=data["X_train"], y=ytr, indices=ix,
-                  cfg=cfg, learner=self.learner,
-                  student_learner=self.student_learner)
-            for i, ix in enumerate(party_indices)]
-        self.server = Server(cfg, self.student_learner, self.final_learner)
+                  cfg=cfg, learner=b.learner,
+                  student_learner=b.student_learner, engine=b.engine)
+            for i, (ix, b) in enumerate(zip(party_indices,
+                                            self.bindings))]
+        self.server = Server(cfg, self.student_learner,
+                             self.final_learner,
+                             bindings=dict(enumerate(self.bindings)))
         self.tq_party, self.tq_server = query_budget(cfg,
                                                      len(data["X_public"]))
 
@@ -142,20 +169,22 @@ class FedKTSession:
                       f"trained, {upd.meta['encoded_bytes']} wire bytes")
 
         t0 = time.time()
+        # engine=None: every party runs under its OWN bound engine (the
+        # heterogeneous contract; in the homogeneous shorthand all
+        # bindings share the session engine, so nothing changes)
         if streaming:
             # the server folds each update the moment it arrives; party
             # training and aggregation overlap, so "parties" time IS the
             # whole collect-and-fold phase
             for upd in self.transport.stream_round(
                     self.parties, party_keys, Xpub, self.tq_party,
-                    self.engine):
+                    None):
                 fold(upd)
             t_parties = time.time() - t0
             t0 = time.time()
         else:
             updates = self.transport.run_round(
-                self.parties, party_keys, Xpub, self.tq_party,
-                self.engine)
+                self.parties, party_keys, Xpub, self.tq_party, None)
             t_parties = time.time() - t0
             t0 = time.time()
             for upd in updates:
@@ -167,9 +196,17 @@ class FedKTSession:
                        self.data["X_test"], self.data["y_test"])
         eps = self.server.epsilon(vote, agg)
 
+        engine_names = sorted({b.engine.name for b in self.bindings})
         meta: Dict[str, Any] = {
             "party_sizes": [p.num_examples for p in self.parties],
-            "engine": self.engine.name,
+            "engine": (engine_names[0] if len(engine_names) == 1
+                       else "mixed"),
+            # one row per party: which model family and engine each silo
+            # brought to the round (identical rows = the homogeneous
+            # shorthand)
+            "party_bindings": [{"learner": b.kind,
+                                "engine": b.engine.name}
+                               for b in self.bindings],
             "transport": self.transport.name,
             "parallelism": getattr(self.transport, "parallelism", None),
             "queries": {"party": self.tq_party, "server": self.tq_server},

@@ -55,7 +55,10 @@ class Transport(Protocol):
                   engine) -> List[PartyUpdate]:
         """Runs every party's local round (one precomputed key each) and
         returns the DECODED updates, in party order.  Each update's
-        ``meta["encoded_bytes"]`` records its measured wire size."""
+        ``meta["encoded_bytes"]`` records its measured wire size.
+        ``engine=None`` lets every party run under its OWN bound engine
+        (the heterogeneous session path); an explicit engine overrides
+        all bindings."""
         ...
 
     def close(self) -> None:

@@ -15,8 +15,6 @@ associative-scan recurrences) so that the 32k-prefill dry-runs fit HBM.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +93,6 @@ def _attention_xla(q, k, v, *, causal, window, softcap, q_offset, block_q):
         bqn = q_blk.shape[1]
         qf = q_blk.astype(jnp.float32) * (dh ** -0.5)
         kf = k.astype(jnp.float32)
-        vf = v.astype(jnp.float32)
         # GQA: fold group into head dim without materializing repeats
         qf = qf.reshape(B, bqn, KV, g, dh)
         s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)       # (B,KV,g,bq,Skv)

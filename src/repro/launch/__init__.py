@@ -1,1 +1,2 @@
-from repro.launch.mesh import make_local_mesh, make_production_mesh  # noqa: F401
+from repro.launch.mesh import (make_local_mesh,  # noqa: F401
+                               make_production_mesh)

@@ -17,7 +17,7 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -16,7 +16,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, TrainConfig, get_config,
                            long_context_variant)

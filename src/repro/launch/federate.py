@@ -18,6 +18,13 @@ in-process session seed-for-seed:
                  PartyUpdate to the coordinator (connect retries with
                  exponential backoff baked in).
 
+Every role accepts ``--learner`` (uniform model family: nn | rf |
+gbdt) or ``--learners rf,gbdt,nn,...`` (one kind per party) — a real
+TCP fleet can mix tree and neural silos in one round because the
+integer (T, U) vote layout is the only cross-party contract.  All
+roles must pass the SAME roster: the coordinator needs it to bind each
+arriving update to its student learner.
+
 Demo (two shells):
   PYTHONPATH=src python -m repro.launch.federate coordinator \
       --parties 4 --port 7733 --deadline-s 120 --min-parties 3
@@ -33,28 +40,76 @@ import argparse
 import json
 
 from repro.configs.base import FedKTConfig
-from repro.core.learners import NNLearner
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.data.synthetic import tabular_binary
-from repro.federation import (FedKTSession, SocketTransport, get_engine,
+from repro.federation import (FedKTSession, PartyBinding, SocketTransport,
                               party_starting_keys, query_budget,
                               run_party_client)
 from repro.models.smallnets import MLP
 
+LEARNER_KINDS = ("nn", "rf", "gbdt")
+
+
+def build_learner(kind: str, args):
+    """One learner instance for a party role.  The same --seed plus the
+    same kind list must rebuild identical learners on every host, so
+    all hyperparameters come from CLI flags (never from local state)."""
+    if kind == "nn":
+        return NNLearner(MLP(num_features=14, num_classes=2,
+                             hidden=args.hidden),
+                         num_classes=2, steps=args.steps)
+    if kind == "rf":
+        return RFLearner(num_classes=2, num_trees=args.trees,
+                         depth=args.depth)
+    if kind == "gbdt":
+        return GBDTLearner(num_classes=2, num_rounds=args.trees,
+                           depth=args.depth)
+    raise ValueError(f"unknown learner kind {kind!r}; "
+                     f"available: {list(LEARNER_KINDS)}")
+
+
+def party_kinds(args):
+    """The fleet's learner-kind roster, one entry per party.  --learners
+    (comma list) pins each silo's model family; --learner is the uniform
+    default.  Every role — coordinator included — derives the SAME
+    roster, because the server must know which student learner answers
+    each party's update."""
+    if args.learners:
+        kinds = [k.strip() for k in args.learners.split(",")]
+        if len(kinds) != args.parties:
+            raise SystemExit(f"--learners names {len(kinds)} kinds but "
+                             f"--parties is {args.parties}")
+        for k in kinds:
+            if k not in LEARNER_KINDS:
+                raise SystemExit(f"--learners: unknown kind {k!r}; "
+                                 f"available: {list(LEARNER_KINDS)}")
+        return kinds
+    return [args.learner] * args.parties
+
 
 def build_session(args, transport) -> FedKTSession:
     """The shared seeded setup: every role derives the same data,
-    partition, and key schedule from --seed, so the only thing that
-    differs between roles is WHERE each piece runs."""
+    partition, key schedule, and per-party learner bindings from the
+    CLI flags, so the only thing that differs between roles is WHERE
+    each piece runs."""
     data = tabular_binary(n=args.n_train, seed=args.seed)
-    learner = NNLearner(MLP(num_features=14, num_classes=2,
-                            hidden=args.hidden),
-                        num_classes=2, steps=args.steps)
+    kinds = party_kinds(args)
     cfg = FedKTConfig(num_parties=args.parties,
                       num_partitions=args.partitions,
                       num_subsets=args.subsets, num_classes=2,
                       privacy_level=args.privacy, gamma=args.gamma,
                       seed=args.seed)
-    return FedKTSession(learner, data, cfg, engine=args.engine,
+    if len(set(kinds)) == 1:
+        # homogeneous shorthand: identical to the pre-binding launcher
+        return FedKTSession(build_learner(kinds[0], args), data, cfg,
+                            engine=args.engine, transport=transport,
+                            retain_students=not args.drop_students)
+    bindings = [PartyBinding(build_learner(k, args), engine=args.engine)
+                for k in kinds]
+    # mixed fleets distill the final model with an NN student on the
+    # server (any kind works; the vote labels are learner-agnostic)
+    return FedKTSession(bindings, data, cfg, engine=args.engine,
+                        final_learner=build_learner("nn", args),
                         transport=transport,
                         retain_students=not args.drop_students)
 
@@ -101,9 +156,10 @@ def run_party(args) -> None:
                                len(session.data["X_public"]))
     nbytes = run_party_client(
         args.host, args.port, party, keys[args.party_id],
-        session.data["X_public"], tq_party, get_engine(args.engine),
+        session.data["X_public"], tq_party, engine=None,
         retries=args.retries, backoff_s=args.backoff_s)
-    print(f"party {args.party_id}: update delivered to "
+    kind = session.bindings[args.party_id].kind
+    print(f"party {args.party_id} ({kind}): update delivered to "
           f"{args.host}:{args.port} ({nbytes} framed bytes)")
 
 
@@ -117,6 +173,18 @@ def main():
     ap.add_argument("--n-train", type=int, default=4096)
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--learner", default="nn", choices=LEARNER_KINDS,
+                    help="model family every party trains (uniform "
+                         "default; see --learners for mixed fleets)")
+    ap.add_argument("--learners", default=None,
+                    help="comma list, one kind per party (e.g. "
+                         "'rf,gbdt,nn,nn') — every role must pass the "
+                         "same list so the server binds each silo's "
+                         "update to its learner")
+    ap.add_argument("--trees", type=int, default=20,
+                    help="rf: trees per forest / gbdt: boosting rounds")
+    ap.add_argument("--depth", type=int, default=6,
+                    help="rf/gbdt tree depth")
     ap.add_argument("--engine", default="loop")
     ap.add_argument("--privacy", default="L0",
                     choices=["L0", "L1", "L2"])

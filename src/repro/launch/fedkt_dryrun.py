@@ -19,7 +19,8 @@ one.  The recorded "protocol" section prices both message kinds
 (PartyUpdate up, TokenLabels down) as the wire codec's MEASURED framed
 bytes via ``codec.lm_protocol_bytes``.
 
-  PYTHONPATH=src python -m repro.launch.fedkt_dryrun [--arch ...] [--members 16]
+  PYTHONPATH=src python -m repro.launch.fedkt_dryrun [--arch ...] \
+      [--members 16]
 """
 import argparse
 import json
@@ -55,7 +56,7 @@ def lower_label_step(arch, members, B, S, mesh, cfg=None):
     key = jax.random.PRNGKey(0)
     one = jax.eval_shape(lambda: model.init(key))
     stacked = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((members,) + l.shape, l.dtype), one)
+        lambda a: jax.ShapeDtypeStruct((members,) + a.shape, a.dtype), one)
     pshard = member_shardings(stacked, mesh)
     tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
     tshard = NamedSharding(mesh, P())

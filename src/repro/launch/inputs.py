@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.models import Model, transformer
+from repro.models import Model
 
 
 def sds(shape, dtype):
@@ -61,7 +61,6 @@ def decode_specs(cfg: ModelConfig, shape: InputShape):
 
 def concrete_like(spec_tree, seed=0):
     """Materialize small concrete arrays matching a spec tree (tests)."""
-    key = jax.random.PRNGKey(seed)
 
     def f(s):
         if jnp.issubdtype(s.dtype, jnp.integer):

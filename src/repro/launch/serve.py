@@ -25,7 +25,6 @@ def serve_batch(model: Model, params, prompts: np.ndarray, gen: int,
                 cache_len: int = 0, extra=None, verbose=True):
     """prompts: (B, P) int32.  Returns (B, gen) generated tokens."""
     B, P = prompts.shape
-    cfg = model.cfg
 
     prefill = jax.jit(make_prefill_step(model))
     decode = jax.jit(make_decode_step(model))

@@ -13,9 +13,8 @@ modality-frontend stubs.  Batches are plain dicts:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer

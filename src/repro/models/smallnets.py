@@ -7,7 +7,6 @@ Interface: init(key) -> params; apply(params, X) -> logits.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

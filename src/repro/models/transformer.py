@@ -13,7 +13,6 @@ The LM head is *chunked*: loss and argmax scan over sequence chunks so the
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -7,7 +7,7 @@ used by the paper's baselines and by FedKT-Prox.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,8 @@ class OptState(NamedTuple):
 @dataclass(frozen=True)
 class Optimizer:
     init: Callable[[Any], OptState]
-    update: Callable[..., tuple]  # (grads, state, params, lr) -> (params, state)
+    # (grads, state, params, lr) -> (params, state)
+    update: Callable[..., tuple]
 
 
 def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:

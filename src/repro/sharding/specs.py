@@ -17,7 +17,7 @@ head*dh dim is sharded instead, which always divides).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,11 @@ from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.core.partition import homogeneous_partition
 from repro.data.synthetic import tabular_binary
 from repro.federation import (CentralPATEStrategy, FedKTSession,
-                              LoopEngine, SoloStrategy, VmapEngine,
-                              get_engine, label_wire_bytes, pytree_bytes,
-                              query_budget)
+                              LoopEngine, PartyBinding, PartyUpdate,
+                              ResolvedBinding, SoloStrategy,
+                              StreamingVoteAggregate, VmapEngine,
+                              get_engine, label_wire_bytes, learner_kind,
+                              pytree_bytes, query_budget)
 from repro.federation.party import Party
 from repro.models.smallnets import MLP
 
@@ -122,6 +124,58 @@ def test_tree_party_update_identical_across_engines(data):
     assert upd_l.wire_bytes() == upd_v.wire_bytes() > 0
 
 
+@pytest.mark.parametrize("make_learner,engine", [
+    (lambda: NNLearner(MLP(14, 2, hidden=16), num_classes=2, steps=60),
+     "loop"),
+    (lambda: NNLearner(MLP(14, 2, hidden=16), num_classes=2, steps=60),
+     "vmap"),
+    (lambda: RFLearner(num_classes=2, num_trees=4, depth=3), "loop"),
+    (lambda: RFLearner(num_classes=2, num_trees=4, depth=3), "vmap"),
+    (lambda: GBDTLearner(num_rounds=6, depth=3), "loop"),
+    (lambda: GBDTLearner(num_rounds=6, depth=3), "vmap"),
+], ids=["nn-loop", "nn-vmap", "rf-loop", "rf-vmap", "gbdt-loop",
+        "gbdt-vmap"])
+def test_binding_api_matches_legacy_constructor(data, make_learner,
+                                                engine):
+    """The bindings refactor's regression contract: a homogeneous
+    session expressed as explicit per-party bindings is bit-identical —
+    students, final model, epsilon, accuracy — to the legacy
+    single-learner constructor, for every learner family and engine.
+    The L2 config exercises the epsilon path (per-party gap folding)
+    too."""
+    learner = make_learner()
+    cfg = FedKTConfig(num_parties=3, num_partitions=1, num_subsets=2,
+                      num_classes=2, privacy_level="L2", gamma=0.1,
+                      query_fraction=0.5, seed=7)
+    legacy = FedKTSession(learner, data, cfg, engine=engine).run()
+    bindings = [PartyBinding(learner, engine=engine)
+                for _ in range(cfg.num_parties)]
+    bound = FedKTSession(bindings, data, cfg, engine=engine).run()
+    assert bound.accuracy == legacy.accuracy
+    assert bound.epsilon == legacy.epsilon
+    _tree_equal(bound.student_states, legacy.student_states)
+    _tree_equal(bound.final_state, legacy.final_state)
+    assert (bound.meta["wire_bytes"]["per_party"]
+            == legacy.meta["wire_bytes"]["per_party"])
+    # the shorthand reports itself as per-party bindings, one identical
+    # row per party
+    kind = learner_kind(learner)
+    assert legacy.meta["party_bindings"] == [
+        {"learner": kind, "engine": engine}] * cfg.num_parties
+
+
+def test_session_rejects_malformed_bindings(data, learner):
+    cfg = FedKTConfig(num_parties=3, num_partitions=1, num_subsets=2,
+                      num_classes=2, seed=0)
+    with pytest.raises(ValueError, match="num_parties=3"):
+        FedKTSession([PartyBinding(learner)] * 2, data, cfg)
+    with pytest.raises(TypeError, match="PartyBinding"):
+        FedKTSession([learner] * 3, data, cfg)
+    with pytest.raises(ValueError, match="student_learner"):
+        FedKTSession([PartyBinding(learner)] * 3, data, cfg,
+                     student_learner=learner)
+
+
 def test_fit_stacked_matches_serial_fit(learner):
     rng = np.random.default_rng(0)
     Xs = [rng.normal(0, 1, (40, 14)).astype(np.float32) for _ in range(3)]
@@ -130,13 +184,13 @@ def test_fit_stacked_matches_serial_fit(learner):
     stacked = learner.fit_stacked(keys, Xs, ys)
     for i in range(3):
         serial = learner.fit(keys[i], Xs[i], ys[i])
-        _tree_equal(serial, jax.tree.map(lambda l: l[i], stacked))
+        _tree_equal(serial, jax.tree.map(lambda a: a[i], stacked))
     # stacked predict rows == serial predict
     Xq = rng.normal(0, 1, (17, 14)).astype(np.float32)
     preds = np.asarray(learner.predict_stacked(stacked, Xq))
     for i in range(3):
         row = np.asarray(learner.predict(
-            jax.tree.map(lambda l: l[i], stacked), Xq))
+            jax.tree.map(lambda a: a[i], stacked), Xq))
         np.testing.assert_array_equal(preds[i], row)
 
 
@@ -169,6 +223,82 @@ def test_engine_registry():
     assert get_engine(eng) is eng
     with pytest.raises(ValueError):
         get_engine("warp")
+
+
+class _RawCountsEngine:
+    """Stub engine that contributes a FIXED (possibly wrong-layout)
+    vote-count array, for exercising the aggregate's layout contract
+    without building per-token learners."""
+    name = "raw"
+
+    def __init__(self, counts):
+        self.counts = np.asarray(counts, dtype=np.int32)
+
+    def student_vote_counts(self, learner, states, X, num_classes, *,
+                            consistent=True):
+        return self.counts
+
+
+def _stub_update(pid, kind=None):
+    return PartyUpdate(party_id=pid, student_states=[None],
+                       vote_gaps=np.zeros(4, np.float32),
+                       num_examples=8, learner_kind=kind,
+                       meta={"num_query_labels": 0, "encoded_bytes": 0})
+
+
+def _stub_binding(counts):
+    return ResolvedBinding(learner=None, student_learner=None,
+                           engine=_RawCountsEngine(counts))
+
+
+def _agg(bindings=None):
+    cfg = FedKTConfig(num_parties=2, num_partitions=1, num_subsets=1,
+                      num_classes=2, privacy_level="L0", seed=0)
+    return StreamingVoteAggregate(cfg, None, _RawCountsEngine(
+        np.zeros((8, 2))), np.zeros((8, 14), np.float32),
+        bindings=bindings)
+
+
+def test_aggregate_rejects_vote_unit_mismatch():
+    """The footgun this PR closes: a party voting 2 units/query (the
+    per-token layout) folded against a 1-unit/query round used to
+    broadcast or crash deep in jnp; now it is refused with an error
+    naming BOTH parties and their unit counts."""
+    agg = _agg(bindings={0: _stub_binding(np.zeros((8, 2))),
+                         1: _stub_binding(np.zeros((16, 2)))})
+    agg.add(_stub_update(0))
+    with pytest.raises(ValueError, match=r"(?s)party 1.*2 unit\(s\)/"
+                                         r"query.*party 0.*1 unit\(s\)"
+                                         r"/query.*per-token"):
+        agg.add(_stub_update(1))
+    # the refused update was NOT folded
+    assert agg.num_parties == 1 and agg.party_ids == [0]
+
+
+def test_aggregate_rejects_class_count_mismatch():
+    agg = _agg(bindings={0: _stub_binding(np.zeros((8, 3)))})
+    with pytest.raises(ValueError, match=r"party 0.*num_classes=2"):
+        agg.add(_stub_update(0))
+
+
+def test_aggregate_rejects_declared_kind_mismatch():
+    """A decoded update whose wire-declared learner kind contradicts
+    the session's binding for that party must be refused before its
+    states are run under the wrong model."""
+    agg = _agg(bindings={0: _stub_binding(np.zeros((8, 2)))})
+    with pytest.raises(ValueError, match="declares learner kind 'rf'"):
+        agg.add(_stub_update(0, kind="rf"))
+    # undeclared (None) skips the cross-check — pre-binding updates
+    # still fold
+    agg.add(_stub_update(0))
+    assert agg.num_parties == 1
+
+
+def test_aggregate_still_rejects_duplicates():
+    agg = _agg()
+    agg.add(_stub_update(0))
+    with pytest.raises(ValueError, match="duplicate update from party 0"):
+        agg.add(_stub_update(0))
 
 
 def test_message_wire_sizes():

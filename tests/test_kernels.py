@@ -254,7 +254,9 @@ def test_node_hist_leaf_build():
                                    atol=1e-4, rtol=1e-5)
 
 
-from hypothesis_compat import given, settings, st
+# imported here, below the deterministic cases, so a missing
+# hypothesis skips ONLY the property tests that follow
+from hypothesis_compat import given, settings, st  # noqa: E402
 
 
 @given(st.integers(1, 24), st.integers(1, 40), st.integers(2, 100),

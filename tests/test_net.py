@@ -12,9 +12,10 @@ import pytest
 from repro.configs.base import FedKTConfig
 from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.data.synthetic import tabular_binary
-from repro.federation import (Coordinator, FedKTSession, QuorumError,
-                              SocketTransport)
-from repro.federation.net import ACK, NAK, send_update_frame
+from repro.federation import (Coordinator, FedKTSession, PartyBinding,
+                              QuorumError, SocketTransport,
+                              party_starting_keys)
+from repro.federation.net import NAK, send_update_frame
 from repro.federation.party import Party
 from repro.models.smallnets import MLP
 
@@ -121,6 +122,92 @@ def test_socket_constant_memory_mode(data, learner, ref_result):
     assert res.epsilon == ref_result.epsilon
     assert res.student_states == []
     assert res.meta["wire_bytes"] == ref_result.meta["wire_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous ensembles: rf + gbdt + nn in one round
+# ---------------------------------------------------------------------------
+def _het_bindings(native: bool):
+    """One binding per L2_CFG party: forest, boosted trees, and MLP.
+    ``native=True`` gives each party its own preferred engine — stacked
+    vmap fits for the tree parties, the serial loop for the nn party —
+    so engines genuinely differ WITHIN the round; False runs everything
+    on the session's loop default."""
+    tree_eng = "vmap" if native else None
+    return [
+        PartyBinding(RFLearner(num_classes=2, num_trees=3, depth=2),
+                     engine=tree_eng),
+        PartyBinding(GBDTLearner(num_rounds=3, depth=2),
+                     engine=tree_eng),
+        PartyBinding(NNLearner(MLP(14, 2, hidden=8), num_classes=2,
+                               steps=20)),
+    ]
+
+
+@pytest.fixture(scope="module")
+def het_ref(data, learner):
+    """Serial in-process reference for the mixed rf + gbdt + nn round
+    (all-loop bindings)."""
+    return FedKTSession(_het_bindings(native=False), data,
+                        FedKTConfig(**L2_CFG),
+                        final_learner=learner).run()
+
+
+@pytest.mark.parametrize("native", [False, True],
+                         ids=["loop", "native-engines"])
+@pytest.mark.parametrize("transport", ["inprocess", "thread", "socket"])
+def test_heterogeneous_round_agrees_across_transports(
+        data, learner, het_ref, transport, native):
+    """Acceptance: a 3-party rf + gbdt + nn session runs end-to-end and
+    is bit-identical across transports — under all-loop bindings AND
+    with each party on its native engine (stacked tree fits and nn
+    vmap are bit-identical to their serial fits, so the per-party
+    engine choice cannot leak into the round result)."""
+    res = FedKTSession(_het_bindings(native), data,
+                       FedKTConfig(**L2_CFG), final_learner=learner,
+                       transport=transport).run()
+    assert res.accuracy == het_ref.accuracy
+    assert res.epsilon == het_ref.epsilon
+    _tree_equal(res.student_states, het_ref.student_states)
+    _tree_equal(res.final_state, het_ref.final_state)
+    assert res.meta["wire_bytes"] == het_ref.meta["wire_bytes"]
+    # each silo's model family is priced separately on the wire
+    by_kind = res.meta["wire_bytes"]["by_learner_kind"]
+    assert sorted(by_kind) == ["gbdt", "nn", "rf"]
+    assert sum(by_kind.values()) == res.meta["wire_bytes"]["updates"]
+    assert [b["learner"] for b in res.meta["party_bindings"]] \
+        == ["rf", "gbdt", "nn"]
+    assert res.meta["engine"] == ("mixed" if native else "loop")
+
+
+def test_heterogeneous_fold_is_arrival_order_independent(data, learner,
+                                                         het_ref):
+    """The mixed-learner histogram is an integer sum: folding the same
+    three updates in reversed arrival order produces identical vote
+    counts, labels, epsilon, and final model."""
+    session = FedKTSession(_het_bindings(native=False), data,
+                           FedKTConfig(**L2_CFG), final_learner=learner)
+    Xpub = session.data["X_public"]
+    party_keys, key = party_starting_keys(session.parties,
+                                          session.cfg.seed)
+    updates = session.transport.run_round(
+        session.parties, party_keys, Xpub, session.tq_party, None)
+    results = []
+    for order in (updates, list(reversed(updates))):
+        agg = session.server.make_aggregate(Xpub, session.tq_server,
+                                            session.engine)
+        for upd in order:
+            agg.add(upd)
+        final_state, vote, _ = session.server.finalize(key, agg)
+        results.append((agg, vote, final_state))
+    (agg_f, vote_f, fin_f), (agg_r, vote_r, fin_r) = results
+    np.testing.assert_array_equal(np.asarray(agg_f.counts),
+                                  np.asarray(agg_r.counts))
+    np.testing.assert_array_equal(np.asarray(vote_f.labels),
+                                  np.asarray(vote_r.labels))
+    assert agg_f.epsilon(vote_f) == agg_r.epsilon(vote_r)
+    _tree_equal(fin_f, fin_r)
+    assert fin_f is not None and het_ref.epsilon == agg_f.epsilon(vote_f)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """Optimizer substrate."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim import (adamw, clip_by_global_norm, prox_grads, sgd,
                          warmup_cosine)

@@ -1,6 +1,5 @@
 """Privacy accountant: theorem bounds, monotonicity, composition."""
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import privacy as P

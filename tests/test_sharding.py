@@ -32,9 +32,6 @@ def test_spec_for_param_rules():
 
 def test_spec_divisibility_fallback():
     """Axes that don't divide the dim are dropped, never invalid."""
-    devs = np.array(jax.devices()[:1]).reshape(1, 1)
-    mesh = jax.sharding.Mesh(devs, ("data", "model"))
-
     class FakeMesh:
         shape = {"data": 16, "model": 16}
     # 24 heads * 128 dh = 3072 divides 16; 10 does not

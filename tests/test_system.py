@@ -1,7 +1,5 @@
 """End-to-end system behaviour: the paper's qualitative claims at test
 scale (synthetic data stand-ins, DESIGN.md §2)."""
-import jax
-import numpy as np
 import pytest
 
 from repro.configs.base import FedKTConfig

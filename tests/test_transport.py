@@ -13,9 +13,8 @@ from repro.configs.base import FedKTConfig
 from repro.core.learners import GBDTLearner, NNLearner, RFLearner
 from repro.data.synthetic import tabular_binary
 from repro.federation import (FedKTSession, InProcessTransport, PartyUpdate,
-                              SubprocessTransport, ThreadTransport,
-                              TokenLabels, codec, get_transport,
-                              pytree_bytes)
+                              ThreadTransport, TokenLabels, codec,
+                              get_transport, pytree_bytes)
 from repro.models.smallnets import MLP
 
 
@@ -207,6 +206,48 @@ def test_codec_roundtrip_property(seed, depth):
     tree = {"root": build(depth)}
     out, _ = _roundtrip(tree)
     _tree_equal(tree, out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["nn", "rf", "gbdt", "lm", "custom-learner",
+                        None]),
+       st.integers(1, 4))
+def test_codec_mixed_learner_update_roundtrip_property(seed, kind,
+                                                       n_students):
+    """Heterogeneous-wire contract: a PartyUpdate from ANY learner
+    family — arbitrary state pytrees, arbitrary declared kind,
+    including undeclared (None) and unregistered custom kinds —
+    round-trips through the codec with its learner_kind, states, gap
+    trace, and framed size intact."""
+    rng = np.random.default_rng(seed)
+    # one shape per family-ish pytree: dense float stacks (nn), int
+    # split/leaf tables (trees), scalars
+    states = []
+    for _ in range(n_students):
+        states.append({
+            "w": rng.normal(0, 1, (int(rng.integers(1, 5)), 3)
+                            ).astype(np.float32),
+            "splits": rng.integers(0, 7, int(rng.integers(0, 6))
+                                   ).astype(np.int32),
+            "bias": np.float64(rng.normal()),
+        })
+    upd = PartyUpdate(
+        party_id=int(rng.integers(0, 1000)),
+        student_states=states,
+        vote_gaps=rng.normal(0, 1, int(rng.integers(0, 9))
+                             ).astype(np.float32),
+        num_examples=int(rng.integers(0, 10**6)),
+        learner_kind=kind,
+        meta={"num_query_labels": int(rng.integers(0, 100))})
+    buf = codec.encode_update(upd)
+    assert codec.update_encoded_nbytes(upd) == len(buf)
+    out = codec.decode_update(buf)
+    assert out.party_id == upd.party_id
+    assert out.learner_kind == kind
+    assert out.num_examples == upd.num_examples
+    np.testing.assert_array_equal(out.vote_gaps, upd.vote_gaps)
+    _tree_equal(out.student_states, upd.student_states)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,12 @@ engine, the MLP on the loop — and records the measured framed wire
 bytes PER MODEL FAMILY: a mixed fleet is priced per family, not per
 average party.
 
+A sixth, vertical row (vertical_3silo) runs the feature-split
+scenario: three silos holding the SAME samples and disjoint column
+slices (core.partition.vertical_split + feature_mask= learners)
+federate over the socket transport, folding into one shared example
+vote domain; records the measured framed bytes per domain.
+
 All engines and transports run the identical protocol and PRNG
 schedule.  Writes the headline numbers to BENCH_federation_engines.json
 at the repo root.
@@ -290,6 +296,80 @@ def bench_het_mixed(repeats):
     }
 
 
+def vertical_setup():
+    from repro.core.partition import vertical_split
+    from repro.federation import PartyBinding
+    data = tabular_binary(n=6000, seed=0)
+    row_order, masks = vertical_split(
+        np.arange(len(data["X_train"])), 14, 3, seed=0)
+    bindings = [
+        PartyBinding(NNLearner(MLP(num_features=len(masks[0]),
+                                   num_classes=2, hidden=32),
+                               num_classes=2, steps=200,
+                               feature_mask=masks[0])),
+        PartyBinding(RFLearner(num_classes=2, num_trees=16, depth=5,
+                               feature_mask=masks[1]), engine="vmap"),
+        PartyBinding(NNLearner(MLP(num_features=len(masks[2]),
+                                   num_classes=2, hidden=32),
+                               num_classes=2, steps=200,
+                               feature_mask=masks[2])),
+    ]
+    final = NNLearner(MLP(num_features=14, num_classes=2, hidden=32),
+                      num_classes=2, steps=200)
+    cfg = FedKTConfig(**{**QUICKSTART, "num_parties": 3})
+    indices = [row_order.copy() for _ in range(3)]
+    return bindings, final, indices, masks, data, cfg, \
+        "vertical nn+rf+nn (feature-masked, 14 cols over 3 silos)"
+
+
+def bench_vertical(repeats):
+    """Vertical row: the feature-split scenario of
+    examples/vertical_fedkt.py at bench scale — every silo holds ALL
+    samples and a disjoint column slice, trains feature-masked
+    learners, and delivers over localhost TCP.  All three silos fold
+    into ONE shared example vote domain (the cross-party contract is
+    the domain, not the features), and the row records the measured
+    codec-framed bytes broken down by that domain."""
+    from repro.federation.net import SocketTransport
+    bindings, final, indices, masks, data, cfg, desc = vertical_setup()
+
+    def one_run():
+        return FedKTSession(bindings, data, cfg, final_learner=final,
+                            party_indices=[ix.copy() for ix in indices],
+                            transport=SocketTransport(
+                                parallelism=cfg.num_parties)).run()
+
+    t0 = time.time()
+    res = one_run()
+    cold = time.time() - t0
+    warms = []
+    for _ in range(repeats):
+        t0 = time.time()
+        res = one_run()
+        warms.append(time.time() - t0)
+    wire = res.meta["wire_bytes"]
+    return {
+        "config": {"num_parties": cfg.num_parties,
+                   "num_partitions": cfg.num_partitions,
+                   "num_subsets": cfg.num_subsets,
+                   "learner": desc, "transport": "socket",
+                   "feature_masks": [list(m) for m in masks],
+                   "n_train": len(data["X_train"])},
+        "cold_s": round(cold, 3),
+        "warm_s": round(sorted(warms)[len(warms) // 2], 3),
+        "warm_runs_s": [round(w, 3) for w in warms],
+        "accuracy": round(res.accuracy, 4),
+        "domains": sorted(res.by_domain),
+        "wire_bytes": {
+            "updates_measured": wire["updates"],        # codec-framed truth
+            "updates_payload": wire["updates_payload"],
+            "by_domain": wire["by_domain"],
+            "by_learner_kind": wire["by_learner_kind"],
+            "labels": wire["labels"],
+        },
+    }
+
+
 def bench(repeats=REPEATS, write=True, names=None):
     rec = {"repeats": repeats, "benches": {}}
     for name in (names or SETUPS):
@@ -299,6 +379,7 @@ def bench(repeats=REPEATS, write=True, names=None):
             nn_setup, repeats)
         rec["benches"]["nn_fleet_socket"] = bench_fleet_socket(repeats)
         rec["benches"]["het_mixed_3way"] = bench_het_mixed(repeats)
+        rec["benches"]["vertical_3silo"] = bench_vertical(repeats)
     if write:
         with open(OUT, "w") as f:
             json.dump(rec, f, indent=1)
@@ -327,6 +408,10 @@ def run(em, quick=True):
                     row["wire_bytes"].get("by_learner_kind",
                                           {}).items()):
                 em.emit("engines", f"{name}/wire/{kind}",
+                        "framed_bytes", nbytes)
+            for dom, nbytes in sorted(
+                    row["wire_bytes"].get("by_domain", {}).items()):
+                em.emit("engines", f"{name}/wire/domain/{dom}",
                         "framed_bytes", nbytes)
         if "warm_s" in row:        # single-variant rows (het_mixed_3way)
             em.emit("engines", name, "warm_s", row["warm_s"])

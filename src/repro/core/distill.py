@@ -108,12 +108,17 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
 def make_label_step(model: Model, num_members: int,
                     gamma: float = 0.0) -> Callable:
     """FedKT vote step over ``num_members`` stacked parameter sets."""
+    from repro.federation.domain import token_domain
 
     def label_step(member_params, batch, key=None):
         preds = jax.vmap(
             lambda p: model.predict(p, batch))(member_params)  # (M,B,S)
-        labels, gap = token_teacher_vote(
-            preds, model.cfg.vocab_size, gamma=gamma, key=key)
+        # shapes are static at trace time, so the token domain (T = B*S
+        # vote rows over the vocab) is a trace-time constant; it stays
+        # anonymous here — only the callers hold the concrete queries
+        dom = token_domain(preds.shape[1] * preds.shape[2],
+                           model.cfg.vocab_size)
+        labels, gap = token_teacher_vote(preds, dom, gamma=gamma, key=key)
         return labels, gap
 
     return label_step

@@ -32,6 +32,17 @@ def _pow2_bucket(n, min_size=32):
     return max(min_size, 1 << (n - 1).bit_length())
 
 
+def _mask_cols(X, mask):
+    """Selects a party's feature columns (vertical federation: each
+    silo holds a slice of the feature space).  ``mask`` is a tuple of
+    column indices — a TUPLE, not an array, because the learners are
+    frozen dataclasses used as jit static arguments and every field
+    must hash.  None = all columns (the horizontal default)."""
+    if mask is None:
+        return np.asarray(X)
+    return np.asarray(X)[:, list(mask)]
+
+
 def _pad_pow2(X, y, min_size=32, bucket=None):
     n = len(X)
     m = bucket or _pow2_bucket(n, min_size)
@@ -52,6 +63,10 @@ class NNLearner:
     batch_size: int = 64
     lr: float = 1e-3
     l2: float = 1e-6
+    # vertical federation: this party trains and predicts on only these
+    # feature columns of any X it is handed (core.partition.
+    # vertical_split); the net must be sized to len(feature_mask)
+    feature_mask: Any = None      # Optional[Tuple[int, ...]]
 
     def _fit_body(self, key, X, y, mask):
         opt = adamw(weight_decay=self.l2)
@@ -86,7 +101,8 @@ class NNLearner:
         return jax.vmap(self._fit_body)(keys, X, y, mask)
 
     def fit(self, key, X, y):
-        Xp, yp, mask = _pad_pow2(np.asarray(X), np.asarray(y))
+        Xp, yp, mask = _pad_pow2(_mask_cols(X, self.feature_mask),
+                                 np.asarray(y))
         return self._fit(key, Xp, yp, mask)
 
     def fit_stacked(self, keys, Xs, ys):
@@ -96,7 +112,8 @@ class NNLearner:
         examples, so a model trained here matches its serial ``fit``
         whenever its individual bucket equals the shared one."""
         bucket = max(_pow2_bucket(len(X)) for X in Xs)
-        padded = [_pad_pow2(np.asarray(X), np.asarray(y), bucket=bucket)
+        padded = [_pad_pow2(_mask_cols(X, self.feature_mask),
+                            np.asarray(y), bucket=bucket)
                   for X, y in zip(Xs, ys)]
         Xp, yp, mask = (jnp.stack([p[i] for p in padded])
                         for i in range(3))
@@ -110,7 +127,8 @@ class NNLearner:
         return self._predict_body(state, X)
 
     def predict(self, state, X):
-        return self._predict(state, jnp.asarray(X))
+        return self._predict(state,
+                             jnp.asarray(_mask_cols(X, self.feature_mask)))
 
     @functools.partial(jax.jit, static_argnums=0)
     def _predict_stacked(self, states, X):
@@ -118,7 +136,8 @@ class NNLearner:
 
     def predict_stacked(self, states, X):
         """(k, T) predictions of k stacked models on one shared X."""
-        return self._predict_stacked(states, jnp.asarray(X))
+        return self._predict_stacked(
+            states, jnp.asarray(_mask_cols(X, self.feature_mask)))
 
 
 @dataclass(frozen=True)
@@ -127,13 +146,14 @@ class RFLearner:
     num_trees: int = 20
     depth: int = 6
     impl: str = "auto"            # ops.tree_hist backend knob
+    feature_mask: Any = None      # vertical: this silo's columns
 
     def _rf(self):
         return T.RandomForest(self.num_trees, self.depth, self.num_classes,
                               impl=self.impl)
 
     def fit(self, key, X, y):
-        X = np.asarray(X, np.float32)
+        X = _mask_cols(X, self.feature_mask).astype(np.float32)
         edges = jnp.asarray(T.make_bins(X))
         forest = self._rf().fit(key, jnp.asarray(X),
                                 jnp.asarray(y, jnp.int32), edges)
@@ -151,7 +171,7 @@ class RFLearner:
         bucket = max(_pow2_bucket(len(X)) for X in Xs)
         edges, Xp, yp, wp, fm = [], [], [], [], []
         for kk, X, y in zip(keys, Xs, ys):
-            X = np.asarray(X, np.float32)
+            X = _mask_cols(X, self.feature_mask).astype(np.float32)
             edges.append(T.make_bins(X))
             w_i, fm_i = rf.bootstrap(kk, len(X), X.shape[1])
             w_pad = np.zeros((self.num_trees, bucket), np.float32)
@@ -168,12 +188,14 @@ class RFLearner:
 
     def predict(self, state, X):
         forest, edges = state
+        X = _mask_cols(X, self.feature_mask)
         return self._rf().predict(forest, jnp.asarray(X, jnp.float32),
                                   edges)
 
     def predict_stacked(self, states, X):
         """(k, T) predictions of k stacked forests on one shared X."""
         forest, edges = states
+        X = _mask_cols(X, self.feature_mask)
         return T.predict_forest_stacked(forest,
                                         jnp.asarray(X, jnp.float32), edges)
 
@@ -184,12 +206,13 @@ class GBDTLearner:
     num_rounds: int = 30
     depth: int = 6
     impl: str = "auto"            # ops.tree_hist backend knob
+    feature_mask: Any = None      # vertical: this silo's columns
 
     def _gb(self):
         return T.GBDT(self.num_rounds, self.depth, impl=self.impl)
 
     def fit(self, key, X, y):
-        X = np.asarray(X, np.float32)
+        X = _mask_cols(X, self.feature_mask).astype(np.float32)
         edges = jnp.asarray(T.make_bins(X))
         gb = self._gb()
         return (gb.fit(key, jnp.asarray(X), jnp.asarray(y, jnp.int32),
@@ -203,7 +226,7 @@ class GBDTLearner:
         bucket = max(_pow2_bucket(len(X)) for X in Xs)
         edges, Xp, yp, wp = [], [], [], []
         for X, y in zip(Xs, ys):
-            X = np.asarray(X, np.float32)
+            X = _mask_cols(X, self.feature_mask).astype(np.float32)
             edges.append(T.make_bins(X))
             Xi, yi, mi = _pad_pow2(X, np.asarray(y), bucket=bucket)
             Xp.append(Xi), yp.append(yi), wp.append(mi)
@@ -216,11 +239,13 @@ class GBDTLearner:
 
     def predict(self, state, X):
         trees, edges = state
+        X = _mask_cols(X, self.feature_mask)
         return self._gb().predict(trees, jnp.asarray(X, np.float32), edges)
 
     def predict_stacked(self, states, X):
         """(k, T) predictions of k stacked GBDTs on one shared X."""
         trees, edges = states
+        X = _mask_cols(X, self.feature_mask)
         return T.predict_gbdt_stacked(trees, jnp.asarray(X, np.float32),
                                       edges, self._gb().learning_rate)
 
@@ -321,6 +346,22 @@ class LMLearner:
         toks = jnp.asarray(self._tokens(X)[:, :-1])
         preds = self._predict_stacked_jit(bank, toks)
         return preds.reshape(preds.shape[0], -1)
+
+    def vote_domain(self, Xq, default_num_classes: int, *,
+                    fingerprint=None):
+        """The LM path's vote layout, declared by the learner (the
+        ``vote_domain`` hook — docs/engines.md "Vote domains"): one
+        vote row per query TOKEN (T = N*S over an (N, S+1) query
+        matrix) ranging over the model's own vocab, regardless of the
+        session's default class count."""
+        from repro.federation.domain import (fingerprint_queries,
+                                             token_domain)
+        X = self._tokens(Xq)
+        if fingerprint is None:
+            fingerprint = fingerprint_queries(np.asarray(Xq))
+        return token_domain(X.shape[0] * (X.shape[1] - 1),
+                            self.model.cfg.vocab_size,
+                            fingerprint=fingerprint)
 
     def label_step(self, num_members: int, gamma: float = 0.0):
         """The raw distill.make_label_step fn over ``num_members``

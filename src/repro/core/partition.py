@@ -7,10 +7,19 @@ Two levels:
      p_{k,j} fraction of class-k examples.
   2. Within a party: s partitions, each covering the whole local dataset,
      each split into t disjoint equal subsets (Algorithm 1 line 2).
+
+Plus the VERTICAL scenario (``vertical_split``): every silo holds the
+SAME samples but a disjoint slice of the feature columns (a hospital
+holds labs, a bank holds transactions, keyed by the same patients).
+Parties align rows by a shared sample-id vector and train
+feature-masked learners (core.learners ``feature_mask=``); the vote
+layout is unchanged — each party's students still emit one vote per
+query example — so vertical silos ride the same (T, U) example domain
+and the same one-shot protocol as horizontal ones.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -41,6 +50,45 @@ def homogeneous_partition(n: int, num_parties: int,
     rng = np.random.default_rng(seed)
     idx = rng.permutation(n)
     return [np.sort(a) for a in np.array_split(idx, num_parties)]
+
+
+def vertical_split(sample_ids: np.ndarray, num_features: int,
+                   num_parties: int, seed: int = 0
+                   ) -> Tuple[np.ndarray, List[Tuple[int, ...]]]:
+    """Feature-sliced federation: n parties hold the SAME samples and
+    disjoint column slices.
+
+    ``sample_ids`` is the shared join key — each silo stores its slice
+    keyed by these ids, in whatever order its own storage uses.
+    Returns:
+
+      row_order     : indices that put the samples in canonical
+                      ascending-id order.  EVERY party applies this
+                      order to its local rows, so row i means the same
+                      sample at every silo — the alignment the vote
+                      depends on (votes are summed per query row).
+      feature_masks : one sorted tuple of column indices per party, a
+                      seeded disjoint cover of range(num_features).
+                      Tuples (not arrays) because learners carry the
+                      mask as a hashable jit-static field
+                      (core.learners ``feature_mask=``).
+
+    Raises on duplicate sample ids (an ambiguous join) and on more
+    parties than feature columns.
+    """
+    ids = np.asarray(sample_ids)
+    if len(np.unique(ids)) != len(ids):
+        raise ValueError("vertical_split needs unique sample ids: the "
+                         "id vector is the cross-silo row join key")
+    if num_parties > num_features:
+        raise ValueError(f"cannot slice {num_features} feature columns "
+                         f"across {num_parties} parties")
+    row_order = np.argsort(ids, kind="stable")
+    rng = np.random.default_rng(seed)
+    cols = rng.permutation(num_features)
+    feature_masks = [tuple(int(c) for c in sorted(part))
+                     for part in np.array_split(cols, num_parties)]
+    return row_order, feature_masks
 
 
 def subsets_of_partition(local_idx: np.ndarray, num_partitions: int,

@@ -8,10 +8,22 @@ Server side (lines 14-22): consistent voting over the n*s student models
 Vote counting runs through kernels/ops.votes (Pallas on TPU); this module
 adds the federation semantics, the on-device Laplace mechanism, and the
 vote-gap bookkeeping the privacy accountant needs (Lemma 7).
+
+Layout contract: the server-side functions (``party_vote_counts``,
+``finalize_vote``, ``token_teacher_vote``) take a ``VoteDomain``
+(federation/domain.py) — the typed (unit, T, U, query-fingerprint)
+contract — instead of a bare class count, and a ``VoteResult`` carries
+the domain it was computed in.  The party-side ``teacher_vote`` keeps
+its integer ``num_classes`` (a within-party ensemble vote has no
+cross-party contract to enforce), as does the batch ``consistent_vote``
+convenience wrapper, which derives an anonymous example domain from its
+inputs.  Duck typing keeps this module free of federation imports: a
+domain here is anything with ``num_classes`` (and the attach-to-result
+field).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +37,8 @@ class VoteResult(NamedTuple):
     #                           kernel path, which never materializes the
     #                           histogram — it emits the gap directly)
     top_gap: jnp.ndarray      # (T,) f32 — clean top1 - top2 (Lemma 7)
+    domain: Optional[Any] = None   # VoteDomain the vote was computed in
+    #                           (None on party-internal ensemble votes)
 
 
 def laplace(key, shape, scale):
@@ -58,11 +72,12 @@ def teacher_vote(preds, num_classes, *, gamma=0.0, key=None,
     return VoteResult(labels, counts, c1 - c2)
 
 
-def party_vote_counts(student_preds, num_classes, *,
+def party_vote_counts(student_preds, domain, *,
                       consistent=True) -> jnp.ndarray:
     """ONE party's additive contribution to the server vote histogram.
 
     student_preds: (s, T) int32 — the party's s student predictions.
+    domain: the VoteDomain the votes live in (U = domain.num_classes).
     Returns (T, U) int32.  Under consistent voting the party contributes
     s votes for class m iff all its s students predict m; otherwise each
     student votes independently.  The full server histogram is the plain
@@ -75,24 +90,28 @@ def party_vote_counts(student_preds, num_classes, *,
     if consistent:
         first = student_preds[0]                          # (T,)
         agree = jnp.all(student_preds == first[None], axis=0)     # (T,)
-        onehot = jax.nn.one_hot(first, num_classes, dtype=jnp.int32)
+        onehot = jax.nn.one_hot(first, domain.num_classes,
+                                dtype=jnp.int32)
         return s * onehot * agree[:, None].astype(jnp.int32)      # (T, U)
-    _, counts = ref.vote_aggregate_ref(student_preds, num_classes)
+    _, counts = ref.vote_aggregate_ref(student_preds, domain.num_classes)
     return counts
 
 
-def finalize_vote(counts, *, gamma=0.0, key=None) -> VoteResult:
+def finalize_vote(counts, domain=None, *, gamma=0.0, key=None
+                  ) -> VoteResult:
     """Noise + argmax + clean-gap bookkeeping over a finished server
     histogram (the second half of ``consistent_vote``, shared with the
-    streaming aggregator).  counts: (T, U) int32 CLEAN counts."""
-    T, num_classes = counts.shape
+    streaming aggregator).  counts: (T, U) int32 CLEAN counts — the
+    histogram's own shape IS the layout, so the domain is attached to
+    the result rather than re-plumbed through the math."""
     scores = counts.astype(jnp.float32)
     if gamma > 0.0:
         assert key is not None
-        scores = scores + laplace(key, (T, num_classes), 1.0 / gamma)
+        scores = scores + laplace(key, counts.shape, 1.0 / gamma)
     labels = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     top2 = jax.lax.top_k(counts.astype(jnp.float32), 2)[0]
-    return VoteResult(labels, counts, top2[:, 0] - top2[:, 1])
+    return VoteResult(labels, counts, top2[:, 0] - top2[:, 1],
+                      domain=domain)
 
 
 def consistent_vote(student_preds, num_classes, *, consistent=True,
@@ -105,19 +124,26 @@ def consistent_vote(student_preds, num_classes, *, consistent=True,
 
     Implemented as the sum of per-party ``party_vote_counts`` terms so
     the batch path and the streaming fold (federation/aggregate.py) are
-    the same integer arithmetic.
+    the same integer arithmetic.  The batch convenience keeps its
+    integer ``num_classes`` signature and derives an anonymous example
+    domain from its inputs (no query set in sight here).
     """
+    from repro.federation.domain import VoteDomain
+    domain = VoteDomain(unit="example",
+                        num_units=int(student_preds.shape[-1]),
+                        num_classes=int(num_classes))
     counts = jnp.sum(
         jax.vmap(lambda sp: party_vote_counts(
-            sp, num_classes, consistent=consistent))(student_preds),
+            sp, domain, consistent=consistent))(student_preds),
         axis=0)                                           # (T, U)
-    return finalize_vote(counts, gamma=gamma, key=key)
+    return finalize_vote(counts, domain, gamma=gamma, key=key)
 
 
-def token_teacher_vote(preds_bts, vocab_size, *, gamma=0.0, key=None,
+def token_teacher_vote(preds_bts, domain, *, gamma=0.0, key=None,
                        impl="auto"):
     """LM-scale party-side vote: preds (M, B, S) over a vocab-sized class
-    space.  Uses the blocked kernel path; returns (labels (B,S), gap).
+    space (U = domain.num_classes).  Uses the blocked kernel path;
+    returns (labels (B,S), gap).
 
     The gap is the CLEAN (pre-noise) top1 - top2, like ``teacher_vote``:
     Lemma 7's accountant needs the noise-free margin, and the LM path
@@ -125,11 +151,12 @@ def token_teacher_vote(preds_bts, vocab_size, *, gamma=0.0, key=None,
     (engine-parity is test-enforced in tests/test_federation_lm.py).
     """
     M, B, S = preds_bts.shape
+    vocab = domain.num_classes
     flat = preds_bts.reshape(M, B * S)
     noise = None
     if gamma > 0.0:
         assert key is not None
-        noise = laplace(key, (B * S, vocab_size), 1.0 / gamma)
-    labels, _, c1, c2 = ops.votes_with_clean(flat, vocab_size, noise,
+        noise = laplace(key, (B * S, vocab), 1.0 / gamma)
+    labels, _, c1, c2 = ops.votes_with_clean(flat, vocab, noise,
                                              impl=impl)
     return labels.reshape(B, S), (c1 - c2).reshape(B, S)

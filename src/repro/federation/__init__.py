@@ -32,7 +32,16 @@
     aggregate.StreamingVoteAggregate— the server's running fold:
                                       constant memory in the party
                                       count, bit-identical to the batch
-                                      vote in any arrival order
+                                      vote in any arrival order; one
+                                      histogram PER VOTE DOMAIN, so
+                                      per-token and per-example voters
+                                      coexist in a round
+    domain.VoteDomain               — the typed (unit, T, U,
+                                      query-fingerprint) vote layout:
+                                      the one cross-party contract,
+                                      declared per binding, validated on
+                                      the wire and at fold time
+                                      (docs/engines.md "Vote domains")
     strategies.*                    — every compared algorithm, one shape
 
 See session.FedKTSession for the entry point; its ``transport=`` /
@@ -44,6 +53,9 @@ from repro.federation.aggregate import StreamingVoteAggregate  # noqa: F401
 from repro.federation.bindings import (PartyBinding,  # noqa: F401
                                        ResolvedBinding, learner_kind,
                                        register_learner_kind)
+from repro.federation.domain import (VoteDomain,  # noqa: F401
+                                     example_domain, fingerprint_queries,
+                                     learner_domain, token_domain)
 from repro.federation.engines import (Engine, LMEngine,  # noqa: F401
                                       LoopEngine, VmapEngine, get_engine)
 from repro.federation.messages import (PartyUpdate,  # noqa: F401

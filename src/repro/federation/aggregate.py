@@ -4,19 +4,30 @@ The batch server held every PartyUpdate (n parties x s student states)
 before voting — fine for five subprocess silos, fatal for a fleet.
 ``StreamingVoteAggregate`` consumes each update the moment it arrives:
 the party's students answer the query set once, their consistent-vote
-contribution is ADDED into one running (T, U) histogram, the per-party
-accounting scalars are folded, and the update is dropped.  Server
-memory is then constant in the number of parties:
+contribution is ADDED into the running histogram of the party's VOTE
+DOMAIN (federation/domain.py), the per-party accounting scalars are
+folded, and the update is dropped.  Server memory is then constant in
+the number of parties:
 
-    histogram (T, U) int32
+    one histogram (T, U) int32 PER DOMAIN (one in every legacy round)
   + per-party SCALARS (wire bytes, example counts, one L2 epsilon term)
   + (L2 only) the arriving party's gap trace, reduced to its epsilon
     contribution on the spot — Thm 4 composes parties by ``max``, so
     the running bound needs one float, not n gap traces.
 
+Domains: each party's binding DECLARES its vote layout up front
+(``ResolvedBinding.domain()`` — derived from the student learner over
+this aggregate's query set), replacing the old first-update-fixes-
+layout rule.  Per-token and per-example voters therefore COEXIST in a
+round — one histogram each, one ``VoteResult`` each, one Thm-4/Lemma-7
+epsilon fold each — while a same-unit layout clash (or an update whose
+wire-declared domain contradicts its binding) is refused with an error
+naming both parties and both domains.  A legacy round is the one-domain
+case of the fold, bit-identical to the pre-domain aggregate.
+
 Bit-identity: ``core.voting.party_vote_counts`` is exactly the per-party
 term the batch ``consistent_vote`` sums, and integer addition commutes —
-folding updates in ANY arrival order produces the same histogram,
+folding updates in ANY arrival order produces the same histograms,
 labels, accuracy, and epsilon as the serial loop (test-enforced in
 tests/test_net.py).  ``retain_students=True`` (the default) additionally
 keeps the student states so RoundResult is unchanged for small
@@ -34,12 +45,27 @@ from repro.core import privacy as P
 from repro.core.voting import VoteResult, finalize_vote
 from repro.federation import codec
 from repro.federation.bindings import learner_kind
+from repro.federation.domain import (VoteDomain, check_same_unit,
+                                     fingerprint_queries, learner_domain)
 from repro.federation.messages import (LABEL_BYTES, PartyUpdate,
                                        TokenLabels)
 
 
+class _DomainFold:
+    """One domain's running state: its histogram, its L2 terms, and the
+    parties that vote in it (first arrival kept for error messages)."""
+
+    def __init__(self, domain: VoteDomain, first_pid: int,
+                 first_kind: str):
+        self.domain = domain
+        self.counts = None               # (T, U) int32 running histogram
+        self.l2_eps: Dict[int, float] = {}  # party_id -> Thm 3 epsilon
+        self.parties: List[int] = []
+        self.first = {"pid": first_pid, "kind": first_kind}
+
+
 class StreamingVoteAggregate:
-    """Running consistent-vote histogram + round accounting.
+    """Running consistent-vote histograms + round accounting.
 
     One instance per round.  ``add`` may be called from the coordinator
     as each update lands (socket transport) or over a finished list
@@ -48,12 +74,10 @@ class StreamingVoteAggregate:
 
     Heterogeneity: ``bindings`` maps party_id -> ResolvedBinding, so a
     mixed-learner round folds each arriving update with THAT party's
-    student learner and engine.  Integer count-folding commutes across
-    learner kinds — the (T, U) vote layout is the only cross-party
-    contract, and it is enforced here: the first folded update fixes
-    the layout, and any later update whose vote-unit count T (per
-    example vs per token) or class count U disagrees is refused with an
-    error naming both parties, never broadcast or truncated.
+    student learner and engine, under the vote domain the binding
+    derives.  Integer count-folding commutes across learner kinds —
+    the domain is the only cross-party contract, and it is enforced
+    here per arrival, never broadcast or truncated.
     """
 
     def __init__(self, cfg: FedKTConfig, student_learner, engine, Xq, *,
@@ -64,10 +88,10 @@ class StreamingVoteAggregate:
         self.Xq = Xq
         self.retain_students = retain_students
         self.bindings = dict(bindings) if bindings else {}
-        self.counts = None                  # (T, U) int32 running histogram
-        self._layout = None                 # (T, U) fixed by first update
-        self._layout_party: Dict[str, Any] = {}  # who fixed it, and how
-        self._l2_eps: Dict[int, float] = {}   # party_id -> Thm 3 epsilon
+        # one query-set hash for the whole round; every binding-derived
+        # domain shares it, so deriving n domains hashes Xq once
+        self._fp = fingerprint_queries(Xq)
+        self._folds: Dict[Any, _DomainFold] = {}  # domain.key -> fold
         self._students: Dict[int, Any] = {}
         self._meta: Dict[int, Dict[str, Any]] = {}
 
@@ -90,60 +114,98 @@ class StreamingVoteAggregate:
                 f"under the wrong learner")
         return lrn, eng, bound_kind
 
-    def _check_layout(self, pid: int, kind: str, contrib) -> None:
-        """The cross-party vote contract: every party's contribution
-        must match the (T, U) layout the first arrival fixed.  T
-        differs when parties vote in different units (U vote units per
-        example for tabular learners vs per TOKEN for LMs); U differs
-        when class spaces disagree.  Either way the integer fold would
-        silently broadcast or crash deep in jnp — name both parties
-        instead."""
+    def expected_domain(self, student_learner) -> VoteDomain:
+        """The binding-derived domain one party's votes fold under —
+        the typed replacement for the first-update-fixes-layout rule."""
+        return learner_domain(student_learner, self.Xq,
+                              self.cfg.num_classes, fingerprint=self._fp)
+
+    def _check_declared(self, pid: int, kind: str, expected: VoteDomain,
+                        declared: Optional[VoteDomain]) -> None:
+        """An update whose wire-declared domain contradicts what the
+        party's binding derives is misconfigured — refuse it naming the
+        party and BOTH domains.  None (legacy frames) skips the check;
+        the binding-derived domain applies."""
+        if declared is not None and not expected.matches(declared):
+            raise ValueError(
+                f"vote-domain mismatch: party {pid} ({kind}) declares a "
+                f"{declared.describe()} on the wire, but its session "
+                f"binding derives a {expected.describe()} — refusing "
+                f"to fold an update that voted in a different domain")
+
+    def _check_contrib(self, pid: int, kind: str, dom: VoteDomain,
+                       contrib) -> None:
+        """The contribution must have exactly the declared domain's
+        (T, U) shape.  The integer fold would silently broadcast or
+        crash deep in jnp otherwise — name the parties instead."""
         shape = tuple(int(d) for d in contrib.shape)
-        if len(shape) != 2 or shape[1] != self.cfg.num_classes:
+        if len(shape) != 2 or shape[1] != dom.num_classes:
             raise ValueError(
                 f"party {pid} ({kind}) contributes vote counts of "
-                f"shape {shape}, expected (T, num_classes="
-                f"{self.cfg.num_classes})")
-        if self._layout is None:
-            self._layout = shape
-            self._layout_party = {"pid": pid, "kind": kind}
-            return
-        if shape != self._layout:
-            first = self._layout_party
+                f"shape {shape}, expected (T={dom.num_units}, "
+                f"num_classes={dom.num_classes}) — the {dom.describe()}")
+        if shape[0] != dom.num_units:
             nq = max(1, len(self.Xq))
+            fold = self._folds.get(dom.key)
+            context = (f"party {fold.first['pid']} "
+                       f"({fold.first['kind']}) already votes in the "
+                       f"declared domain at {dom.num_units} x "
+                       f"{dom.num_classes} "
+                       f"({dom.num_units // nq} unit(s)/query)"
+                       if fold is not None and fold.parties else
+                       f"its binding declares {dom.num_units} vote "
+                       f"units ({dom.num_units // nq} unit(s)/query)")
             raise ValueError(
                 f"vote-layout mismatch: party {pid} ({kind}) "
                 f"contributes {shape[0]} vote units x {shape[1]} "
-                f"classes ({shape[0] // nq} unit(s)/query), but party "
-                f"{first['pid']} ({first['kind']}) fixed the round "
-                f"layout at {self._layout[0]} x {self._layout[1]} "
-                f"({self._layout[0] // nq} unit(s)/query) — per-token "
-                f"and per-example voters cannot share a histogram")
+                f"classes ({shape[0] // nq} unit(s)/query), but "
+                f"{context} — per-token and per-example voters cannot "
+                f"share a histogram")
+
+    def _fold_for(self, pid: int, kind: str, dom: VoteDomain
+                  ) -> _DomainFold:
+        """This domain's running fold, created on first arrival.  A new
+        domain must coexist with every established one: different units
+        get separate histograms, a same-unit layout clash is refused
+        naming both parties and both domains (domain.check_same_unit)."""
+        fold = self._folds.get(dom.key)
+        if fold is None:
+            for other in self._folds.values():
+                check_same_unit(other.domain, dom,
+                                party_a=other.first["pid"], party_b=pid)
+            fold = self._folds[dom.key] = _DomainFold(dom, pid, kind)
+        return fold
 
     # -- folding ----------------------------------------------------------
     def add(self, update: PartyUpdate) -> None:
-        """Folds one party's update into the aggregate and drops it."""
+        """Folds one party's update into its domain's running histogram
+        and drops it."""
         pid = int(update.party_id)
         if pid in self._meta:
             raise ValueError(f"duplicate update from party {pid}")
         lrn, eng, kind = self._binding_for(pid, update)
+        dom = self.expected_domain(lrn)
+        self._check_declared(pid, kind, dom, update.domain)
         contrib = eng.student_vote_counts(
-            lrn, update.student_states, self.Xq,
-            self.cfg.num_classes, consistent=self.cfg.consistent_voting)
-        self._check_layout(pid, kind, contrib)
-        self.counts = contrib if self.counts is None \
-            else self.counts + contrib
+            lrn, update.student_states, self.Xq, dom,
+            consistent=self.cfg.consistent_voting)
+        self._check_contrib(pid, kind, dom, contrib)
+        fold = self._fold_for(pid, kind, dom)
+        fold.counts = contrib if fold.counts is None \
+            else fold.counts + contrib
+        fold.parties.append(pid)
         if self.cfg.privacy_level == "L2":
             # reduce the gap trace to its parallel-composition term now;
             # the trace itself never needs to be retained
-            self._l2_eps[pid] = P.fedkt_l2_epsilon(
+            fold.l2_eps[pid] = P.fedkt_l2_epsilon(
                 [np.asarray(update.vote_gaps)], self.cfg.gamma,
-                self.cfg.num_classes)
+                dom.num_classes)
         if self.retain_students:
             self._students[pid] = update.student_states
         nlabels = int(update.meta["num_query_labels"])
         self._meta[pid] = {
             "learner_kind": kind,
+            "domain": dom.ident,
             "num_examples": int(update.num_examples),
             "encoded_bytes": int(update.meta["encoded_bytes"]),
             "payload_bytes": int(update.wire_bytes()),
@@ -164,28 +226,97 @@ class StreamingVoteAggregate:
         whatever order the updates streamed in)."""
         return sorted(self._meta)
 
-    def finalize(self, key) -> VoteResult:
-        """Noise + argmax over the finished histogram (FedKT-L1 when
-        cfg says so); identical math to the batch ``consistent_vote``."""
-        if self.counts is None:
+    def domains(self) -> List[VoteDomain]:
+        """Every domain that received at least one update, sorted by
+        identity — a DETERMINISTIC order, so multi-domain key threading
+        (server.finalize) never depends on arrival order."""
+        return [self._folds[k].domain for k in
+                sorted(self._folds, key=lambda k: self._folds[k]
+                       .domain.ident)]
+
+    def _sole_fold(self) -> _DomainFold:
+        if not self._folds:
             raise ValueError("no party updates were aggregated")
+        if len(self._folds) > 1:
+            raise ValueError(
+                f"round holds {len(self._folds)} vote domains "
+                f"({[f.domain.ident for f in self._folds.values()]}); "
+                f"use the per-domain API (finalize_domain/counts_for)")
+        return next(iter(self._folds.values()))
+
+    def _fold_of(self, domain: VoteDomain) -> _DomainFold:
+        fold = self._folds.get(domain.key)
+        if fold is None:
+            raise ValueError(f"no updates arrived in the "
+                             f"{domain.describe()}")
+        return fold
+
+    @property
+    def counts(self):
+        """The single-domain round's running histogram (the legacy
+        accessor; multi-domain rounds use ``counts_for``)."""
+        return self._sole_fold().counts
+
+    def counts_for(self, domain: VoteDomain):
+        """One domain's running (T, U) histogram."""
+        return self._fold_of(domain).counts
+
+    def domain_parties(self, domain: VoteDomain) -> List[int]:
+        """Parties that voted in one domain, in party-id order."""
+        return sorted(self._fold_of(domain).parties)
+
+    def primary_domain(self, final_learner) -> VoteDomain:
+        """The domain the FINAL model distills from: the one the final
+        learner itself would vote in (matched by unit first, then full
+        layout), else — and always in a legacy round — the sole
+        domain.  Deterministic: falls back to sorted-identity order."""
+        doms = self.domains()
+        if not doms:
+            raise ValueError("no party updates were aggregated")
+        if len(doms) == 1:
+            return doms[0]
+        want = self.expected_domain(final_learner)
+        for d in doms:
+            if d.key == want.key:
+                return d
+        for d in doms:
+            if d.unit == want.unit:
+                return d
+        return doms[0]
+
+    def finalize_domain(self, domain: VoteDomain, key) -> VoteResult:
+        """Noise + argmax over ONE domain's finished histogram
+        (FedKT-L1 when cfg says so); identical math to the batch
+        ``consistent_vote``.  The result carries its domain."""
+        fold = self._fold_of(domain)
         gamma = self.cfg.gamma if self.cfg.privacy_level == "L1" else 0.0
-        return finalize_vote(self.counts, gamma=gamma, key=key)
+        return finalize_vote(fold.counts, fold.domain, gamma=gamma,
+                             key=key)
+
+    def finalize(self, key) -> VoteResult:
+        """The single-domain round's finalize — the one-domain case of
+        the per-domain fold, bit-identical to the pre-domain aggregate."""
+        return self.finalize_domain(self._sole_fold().domain, key)
 
     def epsilon(self, vote: VoteResult) -> Optional[float]:
         """Data-dependent (eps, delta=1e-5) bound for the configured
-        privacy level over the ARRIVED parties; None under L0."""
+        privacy level over ONE domain's arrived parties; None under L0.
+        The vote names its domain (finalize_domain attached it); an
+        anonymous vote resolves against the sole fold."""
+        fold = (self._fold_of(vote.domain) if vote.domain is not None
+                else self._sole_fold())
         cfg = self.cfg
         if cfg.privacy_level == "L1":
             # party-level: the trusted aggregator sees the global clean
             # histogram — which is exactly the running fold
             return P.fedkt_l1_epsilon(np.asarray(vote.counts), cfg.gamma,
-                                      cfg.num_partitions, cfg.num_classes,
-                                      exact=True)
+                                      cfg.num_partitions,
+                                      fold.domain.num_classes, exact=True)
         if cfg.privacy_level == "L2":
             # Thm 4 parallel composition: max over the per-party terms
-            # folded at arrival time
-            return float(max(self._l2_eps.values()))
+            # folded at arrival time — per domain, so each domain's
+            # bound covers exactly the parties that voted in it
+            return float(max(fold.l2_eps.values()))
         return None
 
     def student_states(self) -> List[List[Any]]:
@@ -194,18 +325,30 @@ class StreamingVoteAggregate:
         return [self._students[pid] for pid in self.party_ids] \
             if self.retain_students else []
 
+    def student_states_for(self, domain: VoteDomain) -> Dict[int, Any]:
+        """party_id -> student states, for the parties that voted in
+        one domain; empty when ``retain_students=False``."""
+        if not self.retain_students:
+            return {}
+        return {pid: self._students[pid]
+                for pid in self.domain_parties(domain)}
+
     def wire_meta(self) -> Dict[str, Any]:
         """The session's wire_bytes block, summed over arrived parties
         (order-independent integer sums — identical to the batch path).
-        ``per_party`` breaks the measured framed bytes down by party id
-        and ``by_learner_kind`` by model family — in a heterogeneous
-        round the families ship very differently-sized states, and both
-        views are needed to price a mixed fleet."""
+        ``per_party`` breaks the measured framed bytes down by party id,
+        ``by_learner_kind`` by model family, and ``by_domain`` by vote
+        domain — in a heterogeneous or mixed-domain round the families
+        ship very differently-sized states, and all three views are
+        needed to price a mixed fleet."""
         rows = self._meta
         by_kind: Dict[str, int] = {}
+        by_domain: Dict[str, int] = {}
         for r in rows.values():
             k = r["learner_kind"]
             by_kind[k] = by_kind.get(k, 0) + r["encoded_bytes"]
+            d = r["domain"]
+            by_domain[d] = by_domain.get(d, 0) + r["encoded_bytes"]
         return {
             "updates": sum(r["encoded_bytes"] for r in rows.values()),
             "updates_payload": sum(r["payload_bytes"]
@@ -217,6 +360,7 @@ class StreamingVoteAggregate:
             "per_party": {pid: rows[pid]["encoded_bytes"]
                           for pid in sorted(rows)},
             "by_learner_kind": by_kind,
+            "by_domain": by_domain,
         }
 
     def party_meta(self) -> Dict[int, Dict[str, Any]]:

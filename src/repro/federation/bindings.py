@@ -22,19 +22,22 @@ bindings instead of a learner:
                   PartyBinding(NNLearner(...), engine="vmap")],
                  data, cfg, final_learner=NNLearner(...))
 
-The only cross-party contract is the (T, U) vote layout: every party's
-server-side student votes must produce the same number of vote units T
-(per example for tabular learners, per TOKEN for the LM path) over the
-same class count U.  ``StreamingVoteAggregate`` enforces this at fold
-time with an error naming both parties (federation/aggregate.py), so a
+The only cross-party contract is the vote DOMAIN (federation/domain.py)
+— the typed (unit, T, U, query-fingerprint) layout each binding derives
+from its student learner via ``ResolvedBinding.domain()``.  Parties in
+the SAME domain fold into one histogram; parties in different-unit
+domains (per-example vs per-token voters) coexist with one histogram
+each; a same-unit layout clash is refused at fold time with an error
+naming both parties and both domains (federation/aggregate.py), so a
 binding mix that cannot share a histogram fails loudly instead of
 broadcasting or truncating.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
+from repro.federation.domain import VoteDomain, learner_domain
 from repro.federation.engines import Engine, get_engine
 
 # Learner kind names, by class name so third-party learners can
@@ -55,6 +58,12 @@ def register_learner_kind(cls_name: str, kind: str) -> None:
     learner only needs this if it wants a kind shorter than its class
     name)."""
     _KIND_BY_CLASS[cls_name] = kind
+
+
+def registered_learner_kinds() -> List[str]:
+    """Every wire-level learner kind the registry knows, sorted — what
+    a CLI should print when a roster names a kind it cannot build."""
+    return sorted(set(_KIND_BY_CLASS.values()))
 
 
 def learner_kind(learner: Any) -> str:
@@ -107,6 +116,19 @@ class ResolvedBinding:
         """The wire-declared learner kind (of the student learner —
         the model the server runs)."""
         return learner_kind(self.student_learner)
+
+    def domain(self, Xq, default_num_classes: int, *,
+               fingerprint=None) -> VoteDomain:
+        """The VoteDomain this party's student votes fold under — the
+        typed replacement for the old first-update-fixes-layout rule:
+        the binding DECLARES the layout up front, derived from the
+        student learner (domain.learner_domain), so the aggregate and
+        the socket coordinator can validate an arriving update before
+        folding it.  ``fingerprint`` short-circuits the query-set hash
+        when the caller already computed it."""
+        return learner_domain(self.student_learner, Xq,
+                              default_num_classes,
+                              fingerprint=fingerprint)
 
 
 def resolve_bindings(learner_or_bindings: Any, *, student_learner=None,

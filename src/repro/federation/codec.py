@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Tuple
 import numpy as np
 
 from repro.checkpoint.checkpoint import _SEP, flatten_tree
+from repro.federation.domain import VoteDomain
 from repro.federation.messages import (PartyUpdate, TokenLabels,
                                        label_wire_bytes)
 
@@ -188,10 +189,16 @@ def _update_tree(update: PartyUpdate):
 def _update_extra(update: PartyUpdate) -> Dict[str, Any]:
     # learner_kind rides in the header: a heterogeneous server must
     # know WHICH learner family the decoded states belong to before it
-    # can run them (bindings.learner_kind; None = undeclared)
+    # can run them (bindings.learner_kind; None = undeclared).  The
+    # declared VoteDomain rides next to it as plain JSON — the header
+    # is extensible, so pre-domain peers at the same codec version
+    # simply never set the field and decode to domain=None (the
+    # inferred-legacy path in federation/aggregate.py)
+    domain = update.domain
     return {"kind": "PartyUpdate", "party_id": int(update.party_id),
             "num_examples": int(update.num_examples),
             "learner_kind": update.learner_kind,
+            "domain": domain.to_wire() if domain is not None else None,
             "meta": dict(update.meta)}
 
 
@@ -211,6 +218,9 @@ def decode_update(buf: bytes) -> PartyUpdate:
                        vote_gaps=tree["vote_gaps"],
                        num_examples=header["num_examples"],
                        learner_kind=header.get("learner_kind"),
+                       # absent on legacy frames -> None: the aggregate
+                       # infers the binding-derived domain instead
+                       domain=VoteDomain.from_wire(header.get("domain")),
                        meta=dict(header["meta"]))
 
 

@@ -99,24 +99,26 @@ class Engine(Protocol):
         ...
 
     def student_vote_counts(self, learner, states: Sequence[Any], X,
-                            num_classes: int, *,
+                            domain, *,
                             consistent: bool = True) -> jnp.ndarray:
-        """ONE party's additive server-vote contribution: (T, U) int32.
-        The streaming aggregator (federation/aggregate.py) folds these
-        per arriving update, so the server never holds more than one
+        """ONE party's additive server-vote contribution, shaped by its
+        VoteDomain: (domain.num_units, domain.num_classes) int32.  The
+        streaming aggregator (federation/aggregate.py) folds these per
+        arriving update, so the server never holds more than one
         party's predictions at a time.  Must equal
-        ``voting.party_vote_counts(predict_students(...), ...)`` —
+        ``voting.party_vote_counts(predict_students(...), domain)`` —
         the default below — but an engine may fuse predict + count into
         one dispatch."""
         ...
 
 
-def _students_vote_counts(engine, learner, states, X, num_classes,
+def _students_vote_counts(engine, learner, states, X, domain,
                           consistent):
     """Default ``student_vote_counts``: the engine's own student
-    predicts, reduced by ``voting.party_vote_counts``."""
+    predicts, reduced by ``voting.party_vote_counts`` over the party's
+    declared domain."""
     preds = engine.predict_students(learner, states, X)
-    return party_vote_counts(preds, num_classes, consistent=consistent)
+    return party_vote_counts(preds, domain, consistent=consistent)
 
 
 def _serial_fit_students(keys, learner, X, labelsets):
@@ -160,10 +162,10 @@ class LoopEngine:
     def predict_students(self, learner, states, X):
         return _serial_predict(learner, states, X)
 
-    def student_vote_counts(self, learner, states, X, num_classes, *,
+    def student_vote_counts(self, learner, states, X, domain, *,
                             consistent=True):
         return _students_vote_counts(self, learner, states, X,
-                                     num_classes, consistent)
+                                     domain, consistent)
 
 
 class VmapEngine:
@@ -218,10 +220,10 @@ class VmapEngine:
         bank = jax.tree.map(lambda *leaves: jnp.stack(leaves), *states)
         return learner.predict_stacked(bank, X)
 
-    def student_vote_counts(self, learner, states, X, num_classes, *,
+    def student_vote_counts(self, learner, states, X, domain, *,
                             consistent=True):
         return _students_vote_counts(self, learner, states, X,
-                                     num_classes, consistent)
+                                     domain, consistent)
 
 
 class LMEngine:
@@ -279,10 +281,10 @@ class LMEngine:
     def predict_students(self, learner, states, X):
         return _serial_predict(learner, states, X)
 
-    def student_vote_counts(self, learner, states, X, num_classes, *,
+    def student_vote_counts(self, learner, states, X, domain, *,
                             consistent=True):
         return _students_vote_counts(self, learner, states, X,
-                                     num_classes, consistent)
+                                     domain, consistent)
 
 
 _ENGINES = {"loop": LoopEngine, "vmap": VmapEngine, "lm": LMEngine}

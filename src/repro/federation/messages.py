@@ -67,12 +67,21 @@ class PartyUpdate:
     session binding and refuses a mismatch (federation/aggregate.py).
     None means "undeclared" (hand-built or pre-binding updates) and
     skips the check.
+
+    ``domain`` is the party's declared VoteDomain (federation/domain.py)
+    — the (unit, T, U, query-fingerprint) layout its student votes fold
+    under.  It rides the codec header next to ``learner_kind``; the
+    aggregate and the socket coordinator validate it against the domain
+    the party's binding derives, and a mismatch is refused naming both
+    domains.  None means "undeclared" (legacy frames, hand-built
+    updates): the binding-derived domain applies unchecked.
     """
     party_id: int
     student_states: List[Any]          # s trained student pytrees
     vote_gaps: np.ndarray              # concat clean top-2 gaps (L2 acct)
     num_examples: int                  # local dataset size (for metrics)
     learner_kind: Optional[str] = None  # student-learner family name
+    domain: Optional[Any] = None       # declared VoteDomain (or None)
     meta: Dict[str, Any] = field(default_factory=dict)
 
     def wire_bytes(self) -> int:
@@ -107,9 +116,19 @@ class TokenLabels:
 
 @dataclass
 class RoundResult:
-    """Outcome of one FedKT round, as produced by the session driver."""
+    """Outcome of one FedKT round, as produced by the session driver.
+
+    ``by_domain`` breaks the round down per vote domain (keyed by
+    ``VoteDomain.ident``): each entry carries that domain's VoteResult
+    (labels + counts + clean gap), its own epsilon fold, the parties
+    that voted in it, and their student states.  A legacy single-domain
+    round has exactly one entry, and the top-level fields
+    (final_state/epsilon/student_states) are that entry's — the
+    one-domain case of the fold.
+    """
     final_state: Any
     accuracy: float
     student_states: List[List[Any]]    # [party][partition] -> state
     epsilon: Optional[float] = None
     meta: Dict[str, Any] = field(default_factory=dict)
+    by_domain: Dict[str, Dict[str, Any]] = field(default_factory=dict)

@@ -147,9 +147,17 @@ class Coordinator:
     """
 
     def __init__(self, expected_ids: Sequence[int], *,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 expected_domains: Optional[Dict[int, Any]] = None):
+        """``expected_domains`` (party_id -> VoteDomain) enables
+        ACK-time domain validation: an update whose wire-declared domain
+        contradicts what the party's binding derives is NAKed at
+        delivery — the party finds out immediately, and the server never
+        trains over it (the fold would refuse it later anyway;
+        aggregate.py is the backstop)."""
         self.host, self._req_port = host, port
         self.expected = set(int(i) for i in expected_ids)
+        self.expected_domains = dict(expected_domains or {})
         self.updates: "queue.Queue[PartyUpdate]" = queue.Queue()
         self.errors: List[str] = []
         self._seen: set = set()
@@ -178,6 +186,14 @@ class Coordinator:
                     if upd.party_id in self._seen:
                         raise ValueError(f"duplicate update from party "
                                          f"{upd.party_id}")
+                    exp = self.expected_domains.get(int(upd.party_id))
+                    if (exp is not None and upd.domain is not None
+                            and not exp.matches(upd.domain)):
+                        raise ValueError(
+                            f"vote-domain mismatch: party "
+                            f"{upd.party_id} declares a "
+                            f"{upd.domain.describe()}, but its session "
+                            f"binding expects a {exp.describe()}")
                     self._seen.add(upd.party_id)
             except (asyncio.IncompleteReadError, ValueError) as err:
                 self.errors.append(f"rejected connection: {err}")
@@ -266,6 +282,27 @@ class SocketTransport(TransportBase):
     name = "socket"
     streams = True
 
+    @staticmethod
+    def _expected_domains(parties, X_public) -> Dict[int, Any]:
+        """party_id -> the VoteDomain each party's binding derives over
+        the server-side query slice — what the coordinator validates
+        arriving declarations against at ACK time.  Lazy imports:
+        session lazy-loads this module through get_transport."""
+        from repro.federation.domain import (fingerprint_queries,
+                                             learner_domain)
+        from repro.federation.session import query_budget
+        Xpub = np.asarray(X_public)
+        doms: Dict[int, Any] = {}
+        fp_by_tq: Dict[int, Any] = {}    # hash each query slice once
+        for p in parties:
+            _, tq = query_budget(p.cfg, len(Xpub))
+            if tq not in fp_by_tq:
+                fp_by_tq[tq] = fingerprint_queries(Xpub[:tq])
+            doms[int(p.party_id)] = learner_domain(
+                p.student_learner, Xpub[:tq], p.cfg.num_classes,
+                fingerprint=fp_by_tq[tq])
+        return doms
+
     def __init__(self, parallelism: Optional[int] = None, *,
                  host: str = "127.0.0.1", port: int = 0,
                  deadline_s: Optional[float] = None,
@@ -288,8 +325,10 @@ class SocketTransport(TransportBase):
         The consumer folds each into the streaming aggregate; this
         generator never accumulates updates."""
         expected = [int(p.party_id) for p in parties]
-        coord = Coordinator(expected, host=self.host,
-                            port=self.port).start()
+        coord = Coordinator(
+            expected, host=self.host, port=self.port,
+            expected_domains=self._expected_domains(parties, X_public)
+        ).start()
         workers = min(len(parties), self.parallelism or 8)
         pool: Optional[ThreadPoolExecutor] = None
         failed: Dict[int, str] = {}

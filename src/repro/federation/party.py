@@ -92,7 +92,21 @@ class Party:
                     f"engine= to local_round or bind one at construction")
             engine = self.engine
         engine = get_engine(engine)
-        s, t, u = cfg.num_partitions, cfg.num_subsets, cfg.num_classes
+        # the party's declared VoteDomain: the layout its STUDENTS vote
+        # in at the server, over the SERVER-side query slice (under
+        # L1/L2 the party answers tq_party queries but its students are
+        # folded over tq_server), fingerprinted so two parties cannot
+        # silently vote on different query sets.  Lazy imports: session
+        # imports party, and domain derivation is only needed here.
+        from repro.federation.domain import (fingerprint_queries,
+                                             learner_domain)
+        from repro.federation.session import query_budget
+        _, tq_server = query_budget(cfg, len(X_public))
+        Xq_server = X_public[:tq_server]
+        dom = learner_domain(self.student_learner, Xq_server,
+                             cfg.num_classes,
+                             fingerprint=fingerprint_queries(Xq_server))
+        s, t, u = cfg.num_partitions, cfg.num_subsets, dom.num_classes
         Xq = X_public[:num_queries]
         plan = subsets_of_partition(self.indices, s, t,
                                     seed=cfg.seed + 17 * self.party_id)
@@ -130,6 +144,10 @@ class Party:
                              # run to fold this party's votes
                              learner_kind=learner_kind(
                                  self.student_learner),
+                             # the declared vote layout, validated at
+                             # ACK time (net.py) and at fold time
+                             # (aggregate.py)
+                             domain=dom,
                              meta={"num_teachers": s * t,
                                    # label answers are one vote unit per
                                    # LABEL (= per token on the LM path,

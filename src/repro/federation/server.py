@@ -52,16 +52,40 @@ class Server:
             bindings=self.bindings)
 
     def finalize(self, key, agg: StreamingVoteAggregate):
-        """Vote over the finished histogram + final distillation.
-        Returns (final_state, VoteResult, key) — key threading matches
-        the legacy loop split-for-split (one split for vote noise, one
-        for the final fit)."""
+        """Vote over the finished histogram + final distillation, for a
+        SINGLE-domain round (the legacy entry point; multi-domain rounds
+        use ``finalize_all``).  Returns (final_state, VoteResult, key) —
+        key threading matches the legacy loop split-for-split (one split
+        for vote noise, one for the final fit)."""
         key, kk = jax.random.split(key)
         vote = agg.finalize(kk)
         key, kk = jax.random.split(key)
         final_state = self.final_learner.fit(kk, agg.Xq,
                                              np.asarray(vote.labels))
         return final_state, vote, key
+
+    def finalize_all(self, key, agg: StreamingVoteAggregate):
+        """Per-domain finalize: every domain that received votes gets
+        its own noise split and its own VoteResult, in sorted-identity
+        order (deterministic whatever order the updates streamed in);
+        the final model distills from the PRIMARY domain — the one the
+        final learner itself votes in (agg.primary_domain).
+
+        Returns (final_state, primary VoteResult, {domain.ident ->
+        VoteResult}, key).  With one domain this is split-for-split the
+        legacy ``finalize`` — one split for vote noise, one for the
+        final fit — so every existing single-domain round stays
+        bit-identical."""
+        votes = {}
+        for dom in agg.domains():
+            key, kk = jax.random.split(key)
+            votes[dom.ident] = agg.finalize_domain(dom, kk)
+        primary = agg.primary_domain(self.final_learner)
+        vote = votes[primary.ident]
+        key, kk = jax.random.split(key)
+        final_state = self.final_learner.fit(kk, agg.Xq,
+                                             np.asarray(vote.labels))
+        return final_state, vote, votes, key
 
     def aggregate(self, key, updates: Sequence[PartyUpdate], X_public,
                   num_queries: int, engine: Engine = None):

@@ -189,12 +189,32 @@ class FedKTSession:
             t0 = time.time()
             for upd in updates:
                 fold(upd)
-        final_state, vote, key = self.server.finalize(key, agg)
+        final_state, vote, votes, key = self.server.finalize_all(key, agg)
         t_server = time.time() - t0
 
         acc = accuracy(self.final_learner, final_state,
                        self.data["X_test"], self.data["y_test"])
-        eps = self.server.epsilon(vote, agg)
+        # per-domain breakdown: one VoteResult + one epsilon fold per
+        # vote domain (a legacy round has exactly one entry, and the
+        # top-level fields are that entry's)
+        by_domain: Dict[str, Dict[str, Any]] = {}
+        for dom in agg.domains():
+            v = votes[dom.ident]
+            by_domain[dom.ident] = {
+                "domain": dom,
+                "vote": v,
+                "labels": np.asarray(v.labels),
+                "epsilon": agg.epsilon(v),
+                "parties": agg.domain_parties(dom),
+                "student_states": agg.student_states_for(dom),
+            }
+        # session-level bound: privacy composes across domains by max —
+        # each domain's fold already max-composes its own parties
+        # (Thm 4), and in a single-domain round this IS that domain's
+        # epsilon, unchanged from the legacy path
+        dom_eps = [row["epsilon"] for row in by_domain.values()
+                   if row["epsilon"] is not None]
+        eps = max(dom_eps) if dom_eps else None
 
         engine_names = sorted({b.engine.name for b in self.bindings})
         meta: Dict[str, Any] = {
@@ -224,4 +244,4 @@ class FedKTSession:
             meta["dropped_parties"] = report.get("dropped", [])
         return RoundResult(final_state=final_state, accuracy=acc,
                            student_states=agg.student_states(),
-                           epsilon=eps, meta=meta)
+                           epsilon=eps, meta=meta, by_domain=by_domain)

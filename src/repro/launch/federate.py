@@ -20,10 +20,14 @@ in-process session seed-for-seed:
 
 Every role accepts ``--learner`` (uniform model family: nn | rf |
 gbdt) or ``--learners rf,gbdt,nn,...`` (one kind per party) — a real
-TCP fleet can mix tree and neural silos in one round because the
-integer (T, U) vote layout is the only cross-party contract.  All
+TCP fleet can mix tree and neural silos in one round because the vote
+DOMAIN (federation/domain.py) is the only cross-party contract.  All
 roles must pass the SAME roster: the coordinator needs it to bind each
-arriving update to its student learner.
+arriving update to its student learner.  ``--vertical`` switches the
+round to feature-split silos: every party holds ALL samples and a
+disjoint column slice (core.partition.vertical_split), trains a
+feature-masked learner, and votes in the shared example domain — see
+examples/vertical_fedkt.py for the annotated walkthrough.
 
 Demo (two shells):
   PYTHONPATH=src python -m repro.launch.federate coordinator \
@@ -39,31 +43,41 @@ from __future__ import annotations
 import argparse
 import json
 
+import numpy as np
+
 from repro.configs.base import FedKTConfig
 from repro.core.learners import GBDTLearner, NNLearner, RFLearner
+from repro.core.partition import vertical_split
 from repro.data.synthetic import tabular_binary
 from repro.federation import (FedKTSession, PartyBinding, SocketTransport,
                               party_starting_keys, query_budget,
                               run_party_client)
+from repro.federation.bindings import registered_learner_kinds
 from repro.models.smallnets import MLP
 
 LEARNER_KINDS = ("nn", "rf", "gbdt")
+NUM_FEATURES = 14          # tabular_binary's fixed feature width
 
 
-def build_learner(kind: str, args):
+def build_learner(kind: str, args, feature_mask=None):
     """One learner instance for a party role.  The same --seed plus the
     same kind list must rebuild identical learners on every host, so
-    all hyperparameters come from CLI flags (never from local state)."""
+    all hyperparameters come from CLI flags (never from local state).
+    ``feature_mask`` (a sorted column-index tuple from
+    ``vertical_split``) builds the vertical variant: the learner trains
+    and predicts on only its silo's feature slice."""
+    nfeat = NUM_FEATURES if feature_mask is None else len(feature_mask)
     if kind == "nn":
-        return NNLearner(MLP(num_features=14, num_classes=2,
+        return NNLearner(MLP(num_features=nfeat, num_classes=2,
                              hidden=args.hidden),
-                         num_classes=2, steps=args.steps)
+                         num_classes=2, steps=args.steps,
+                         feature_mask=feature_mask)
     if kind == "rf":
         return RFLearner(num_classes=2, num_trees=args.trees,
-                         depth=args.depth)
+                         depth=args.depth, feature_mask=feature_mask)
     if kind == "gbdt":
         return GBDTLearner(num_classes=2, num_rounds=args.trees,
-                           depth=args.depth)
+                           depth=args.depth, feature_mask=feature_mask)
     raise ValueError(f"unknown learner kind {kind!r}; "
                      f"available: {list(LEARNER_KINDS)}")
 
@@ -73,16 +87,21 @@ def party_kinds(args):
     (comma list) pins each silo's model family; --learner is the uniform
     default.  Every role — coordinator included — derives the SAME
     roster, because the server must know which student learner answers
-    each party's update."""
+    each party's update.  A kind this launcher cannot build fails HERE
+    — up front, naming the offending party — not as a stray exception
+    mid-round on some host."""
     if args.learners:
         kinds = [k.strip() for k in args.learners.split(",")]
         if len(kinds) != args.parties:
             raise SystemExit(f"--learners names {len(kinds)} kinds but "
                              f"--parties is {args.parties}")
-        for k in kinds:
+        for i, k in enumerate(kinds):
             if k not in LEARNER_KINDS:
-                raise SystemExit(f"--learners: unknown kind {k!r}; "
-                                 f"available: {list(LEARNER_KINDS)}")
+                raise SystemExit(
+                    f"--learners: unknown learner kind {k!r} for party "
+                    f"{i}; this launcher builds {list(LEARNER_KINDS)} "
+                    f"(registered wire kinds: "
+                    f"{registered_learner_kinds()})")
         return kinds
     return [args.learner] * args.parties
 
@@ -99,6 +118,23 @@ def build_session(args, transport) -> FedKTSession:
                       num_subsets=args.subsets, num_classes=2,
                       privacy_level=args.privacy, gamma=args.gamma,
                       seed=args.seed)
+    if args.vertical:
+        # feature-split silos: every party holds ALL samples (aligned
+        # by the shared sample-id vector — here the synthetic row ids)
+        # and a disjoint column slice; its learner is feature-masked,
+        # so raw off-silo columns never cross the boundary.  The final
+        # model distills on the full-width public queries.
+        row_order, masks = vertical_split(
+            np.arange(len(data["X_train"])), NUM_FEATURES, args.parties,
+            seed=args.seed)
+        bindings = [PartyBinding(build_learner(k, args, feature_mask=m),
+                                 engine=args.engine)
+                    for k, m in zip(kinds, masks)]
+        indices = [row_order.copy() for _ in range(args.parties)]
+        return FedKTSession(bindings, data, cfg, engine=args.engine,
+                            final_learner=build_learner("nn", args),
+                            party_indices=indices, transport=transport,
+                            retain_students=not args.drop_students)
     if len(set(kinds)) == 1:
         # homogeneous shorthand: identical to the pre-binding launcher
         return FedKTSession(build_learner(kinds[0], args), data, cfg,
@@ -199,6 +235,12 @@ def main():
     ap.add_argument("--min-parties", type=int, default=None,
                     help="quorum: proceed at the deadline with at "
                          "least this many updates")
+    ap.add_argument("--vertical", action="store_true",
+                    help="feature-split silos: every party holds all "
+                         "samples and a disjoint slice of the feature "
+                         "columns (core.partition.vertical_split); "
+                         "works in every role — remote parties rebuild "
+                         "the same masks from --seed")
     ap.add_argument("--drop-students", action="store_true",
                     help="fold-and-drop updates (constant server "
                          "memory; RoundResult carries no student "

@@ -1,0 +1,417 @@
+"""VoteDomain: the typed vote-layout contract — identity/wire
+round-trips, mixed per-token + per-example rounds (two independent
+histograms in one socket session, arrival-order independent and
+bit-identical to the single-domain folds), same-unit clash refusal
+naming both parties, ACK-time domain validation at the coordinator,
+and the vertically-partitioned scenario (feature-split silos over real
+TCP — the tiny-config smoke of examples/vertical_fedkt.py)."""
+import argparse
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedKTConfig, TrainConfig
+from repro.core.learners import (GBDTLearner, LMLearner, NNLearner,
+                                 RFLearner)
+from repro.core.partition import vertical_split
+from repro.data import synthetic
+from repro.data.synthetic import tabular_binary
+from repro.federation import (FedKTSession, PartyBinding, SocketTransport,
+                              VoteDomain, party_starting_keys)
+from repro.federation.domain import (check_same_unit, example_domain,
+                                     fingerprint_queries, learner_domain,
+                                     token_domain)
+from repro.federation.codec import decode_update, encode_update
+from repro.federation.engines import LoopEngine
+from repro.federation.messages import PartyUpdate
+from repro.federation.net import Coordinator, send_update_frame
+from repro.federation.party import Party
+from repro.federation.server import Server
+from repro.launch import federate
+from repro.models.smallnets import MLP
+
+
+def _wire_trip(upd):
+    """What every transport does: encode, decode, annotate the measured
+    frame size (the aggregate's wire accounting reads it)."""
+    buf = encode_update(upd)
+    out = decode_update(buf)
+    out.meta["encoded_bytes"] = len(buf)
+    return out
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# The domain type itself
+# ---------------------------------------------------------------------------
+def test_domain_identity_and_matching():
+    a = VoteDomain("example", 16, 2, fingerprint="abcd")
+    assert a.key == ("example", 16, 2, "abcd")
+    assert "example" in a.ident and "T16" in a.ident and "U2" in a.ident
+    # full agreement matches; anonymous fingerprint is a wildcard
+    assert a.matches(VoteDomain("example", 16, 2, fingerprint="abcd"))
+    assert a.matches(VoteDomain("example", 16, 2))           # anon wire
+    assert VoteDomain("example", 16, 2).matches(a)
+    # any layout field breaks the match
+    assert not a.matches(VoteDomain("example", 16, 2, fingerprint="ffff"))
+    assert not a.matches(VoteDomain("example", 17, 2, fingerprint="abcd"))
+    assert not a.matches(VoteDomain("example", 16, 3, fingerprint="abcd"))
+    assert not a.matches(VoteDomain("token", 16, 2, fingerprint="abcd"))
+    # label_names is a descriptive tag, never identity
+    tagged = VoteDomain("example", 16, 2, fingerprint="abcd",
+                        label_names=("no", "yes"))
+    assert tagged == a and tagged.key == a.key
+
+
+def test_domain_validation_and_wire_roundtrip():
+    with pytest.raises(ValueError, match="unknown vote unit"):
+        VoteDomain("pixel", 4, 2)
+    with pytest.raises(ValueError, match="degenerate"):
+        VoteDomain("example", 0, 2)
+    assert VoteDomain.from_wire(None) is None
+    for dom in (VoteDomain("token", 768, 64, fingerprint="00ff"),
+                VoteDomain("example", 5, 3),
+                VoteDomain("example", 5, 3, label_names=("a", "b", "c"))):
+        back = VoteDomain.from_wire(dom.to_wire())
+        assert back == dom and back.key == dom.key
+        assert back.label_names == dom.label_names
+    inferred = VoteDomain.infer_legacy((12, 4))
+    assert inferred.key == ("example", 12, 4, None)
+
+
+def test_fingerprint_distinguishes_content_not_just_shape():
+    X = np.arange(12, dtype=np.float32).reshape(4, 3)
+    fp = fingerprint_queries(X)
+    assert fp == fingerprint_queries(X.copy())
+    Y = X.copy()
+    Y[0, 0] += 1
+    assert fp != fingerprint_queries(Y)
+    assert fp != fingerprint_queries(X.astype(np.float64))
+
+
+def test_learner_domain_derivation():
+    Xq = np.zeros((8, 14), np.float32)
+    nn = NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=5)
+    dom = learner_domain(nn, Xq, 10)
+    # the learner's OWN class count wins over the session default
+    assert dom.key[:3] == ("example", 8, 2)
+    assert dom.fingerprint == fingerprint_queries(Xq)
+
+    class Bare:                       # no num_classes field
+        pass
+    assert learner_domain(Bare(), Xq, 10).num_classes == 10
+    assert example_domain(Xq, 2).unit == "example"
+    assert token_domain(128, 64).key == ("token", 128, 64, None)
+
+
+def test_check_same_unit_names_both_parties():
+    ex = VoteDomain("example", 16, 2)
+    tok = VoteDomain("token", 256, 64)
+    check_same_unit(ex, tok, party_a=0, party_b=1)   # coexist: no raise
+    with pytest.raises(ValueError,
+                       match=r"(?s)clash.*party 0.*party 3"):
+        check_same_unit(ex, VoteDomain("example", 16, 3),
+                        party_a=0, party_b=3)
+
+
+# ---------------------------------------------------------------------------
+# Mixed per-token + per-example rounds
+# ---------------------------------------------------------------------------
+MIXED_FCFG = dict(num_parties=2, num_partitions=1, num_subsets=2,
+                  num_classes=2, beta=100.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def mixed_setup(tiny_lm):
+    """One lm silo + one nn silo over SHARED token sequences: the LM
+    reads them as (N, S+1) token matrices, the MLP as S+1 numeric
+    features — same X, two vote units."""
+    cfg, model = tiny_lm
+    tcfg = TrainConfig(batch_size=4, seq_len=16, steps=2,
+                       learning_rate=3e-3)
+    toks = synthetic.tokens(n_seqs=32, seq_len=17, vocab=cfg.vocab_size,
+                            seed=0)
+    data = {"X_train": toks["train"].astype(np.float32),
+            "y_train": (toks["train"][:, 0] % 2).astype(np.int32),
+            "X_public": toks["public"].astype(np.float32),
+            "X_test": toks["test"].astype(np.float32),
+            "y_test": (toks["test"][:, 0] % 2).astype(np.int32)}
+    nfeat = data["X_train"].shape[1]
+    lm = LMLearner(model, tcfg, data_seed=MIXED_FCFG["seed"])
+    nn = NNLearner(MLP(nfeat, 2, hidden=8), num_classes=2, steps=10)
+    bindings = [PartyBinding(lm, engine="lm"), PartyBinding(nn)]
+    return {"data": data, "bindings": bindings, "nn": nn, "lm": lm,
+            "vocab": cfg.vocab_size}
+
+
+def _mixed_session(mixed_setup, **kw):
+    cfg = FedKTConfig(**MIXED_FCFG)
+    return FedKTSession(mixed_setup["bindings"], mixed_setup["data"], cfg,
+                        final_learner=mixed_setup["nn"], **kw)
+
+
+def test_mixed_domain_socket_session(mixed_setup):
+    """Acceptance: one lm (per-token) + one nn (per-example) party in a
+    SOCKET session complete with two independent per-domain
+    VoteResults, each with its own labels and its own epsilon fold."""
+    res = _mixed_session(
+        mixed_setup, transport=SocketTransport(parallelism=2)).run()
+    assert len(res.by_domain) == 2
+    units = sorted(d["vote"].domain.unit for d in res.by_domain.values())
+    assert units == ["example", "token"]
+    Npub = len(mixed_setup["data"]["X_public"])
+    S = mixed_setup["data"]["X_public"].shape[1] - 1
+    for ident, row in res.by_domain.items():
+        dom = row["vote"].domain
+        assert ident == dom.ident
+        T = Npub * S if dom.unit == "token" else Npub
+        assert row["labels"].shape == (T,)
+        assert np.asarray(row["vote"].counts).shape == \
+            (T, dom.num_classes)
+        assert row["epsilon"] is None                      # L0
+        assert len(row["parties"]) == 1
+    # wire accounting breaks down per domain too
+    by_dom = res.meta["wire_bytes"]["by_domain"]
+    assert set(by_dom) == set(res.by_domain)
+    assert all(v > 0 for v in by_dom.values())
+    assert 0.0 <= res.accuracy <= 1.0
+
+
+def test_mixed_domains_match_single_domain_folds_any_order(mixed_setup):
+    """Each domain's VoteResult in the mixed round is bit-identical to
+    the single-domain fold of just that party — in either arrival
+    order (integer folds commute; domains never share a histogram)."""
+    cfg = FedKTConfig(**MIXED_FCFG)
+    session = _mixed_session(mixed_setup)
+    keys, _ = party_starting_keys(session.parties, cfg.seed)
+    updates = [_wire_trip(p.local_round(k, session.data["X_public"],
+                                        session.tq_party)[0])
+               for p, k in zip(session.parties, keys)]
+    fkey = jax.random.PRNGKey(99)
+
+    def fold(order, only=None):
+        agg = session.server.make_aggregate(session.data["X_public"],
+                                            session.tq_server,
+                                            session.engine)
+        for i in order:
+            if only is None or i in only:
+                agg.add(updates[i])
+        return agg
+
+    # single-domain references: one aggregate per party
+    singles = {}
+    for i, upd in enumerate(updates):
+        agg_i = fold([i], only={i})
+        (dom,) = agg_i.domains()
+        singles[dom.ident] = agg_i.finalize_domain(dom, fkey)
+
+    for order in ([0, 1], [1, 0]):
+        agg = fold(order)
+        assert len(agg.domains()) == 2
+        for dom in agg.domains():
+            vote = agg.finalize_domain(dom, fkey)
+            ref = singles[dom.ident]
+            np.testing.assert_array_equal(np.asarray(vote.counts),
+                                          np.asarray(ref.counts))
+            np.testing.assert_array_equal(np.asarray(vote.labels),
+                                          np.asarray(ref.labels))
+            assert vote.domain == ref.domain
+
+
+def test_mixed_socket_session_order_independent(mixed_setup):
+    """The full socket session twice: per-domain labels and counts are
+    identical run-to-run even though TCP arrival order is arbitrary."""
+    r1 = _mixed_session(
+        mixed_setup, transport=SocketTransport(parallelism=2)).run()
+    r2 = _mixed_session(
+        mixed_setup, transport=SocketTransport(parallelism=1)).run()
+    assert set(r1.by_domain) == set(r2.by_domain)
+    for ident in r1.by_domain:
+        np.testing.assert_array_equal(r1.by_domain[ident]["labels"],
+                                      r2.by_domain[ident]["labels"])
+        np.testing.assert_array_equal(
+            np.asarray(r1.by_domain[ident]["vote"].counts),
+            np.asarray(r2.by_domain[ident]["vote"].counts))
+    _tree_equal(r1.final_state, r2.final_state)
+    assert r1.accuracy == r2.accuracy
+
+
+def test_same_unit_class_clash_refused_naming_both_parties():
+    """Two example-unit parties with different class spaces cannot share
+    a histogram: the fold refuses the second update, naming both
+    parties and both domains."""
+    data = tabular_binary(n=256, seed=0)
+    cfg = FedKTConfig(num_parties=2, num_partitions=1, num_subsets=2,
+                      num_classes=2, seed=0)
+    b0 = PartyBinding(NNLearner(MLP(14, 2, hidden=8), num_classes=2,
+                                steps=5)).resolve()
+    b1 = PartyBinding(NNLearner(MLP(14, 3, hidden=8), num_classes=3,
+                                steps=5)).resolve()
+    idx = np.arange(len(data["X_train"]))
+    parties = [Party(party_id=i, X=data["X_train"], y=data["y_train"],
+                     indices=idx, cfg=cfg, learner=b.learner,
+                     student_learner=b.student_learner, engine=b.engine)
+               for i, b in enumerate([b0, b1])]
+    server = Server(cfg, b0.student_learner, b0.student_learner,
+                    bindings={0: b0, 1: b1})
+    agg = server.make_aggregate(data["X_public"],
+                                len(data["X_public"]), LoopEngine())
+    key = jax.random.PRNGKey(0)
+    for p in parties:
+        raw, key = p.local_round(key, data["X_public"],
+                                 len(data["X_public"]))
+        upd = _wire_trip(raw)
+        if p.party_id == 0:
+            agg.add(upd)
+        else:
+            with pytest.raises(ValueError,
+                               match=r"(?s)party 0.*party 1"):
+                agg.add(upd)
+
+
+def test_coordinator_naks_domain_mismatch_at_ack_time():
+    """A party whose declared domain contradicts what the session
+    expects is NAKed at DELIVERY — the server never folds (or trains
+    over) the update, and the rejection is recorded."""
+    upd = PartyUpdate(
+        party_id=0,
+        student_states=[{"w": np.zeros((2, 2), np.float32)}],
+        vote_gaps=np.zeros((4,), np.float32), num_examples=4,
+        learner_kind="nn",
+        domain=VoteDomain("example", 8, 2, fingerprint="aaaa"),
+        meta={"num_teachers": 1, "num_query_labels": 8})
+    expected = {0: VoteDomain("token", 128, 64, fingerprint="bbbb")}
+    coord = Coordinator([0], expected_domains=expected).start()
+    try:
+        with pytest.raises(ConnectionError, match="NAK"):
+            send_update_frame("127.0.0.1", coord.port,
+                              encode_update(upd), retries=1)
+        assert any("vote-domain mismatch" in e for e in coord.errors)
+        assert coord.updates.empty()
+    finally:
+        coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# Vertical federation
+# ---------------------------------------------------------------------------
+def test_vertical_split_is_seeded_disjoint_cover():
+    ids = np.array([30, 10, 20, 40, 50])
+    row_order, masks = vertical_split(ids, 14, 3, seed=7)
+    # row alignment: applying row_order sorts the shared sample ids
+    np.testing.assert_array_equal(ids[row_order],
+                                  np.sort(ids))
+    # masks: sorted disjoint tuples covering every column exactly once
+    flat = [c for m in masks for c in m]
+    assert sorted(flat) == list(range(14))
+    assert all(m == tuple(sorted(m)) for m in masks)
+    assert all(isinstance(c, int) for m in masks for c in m)
+    # deterministic in the seed
+    _, again = vertical_split(ids, 14, 3, seed=7)
+    assert again == masks
+    _, other = vertical_split(ids, 14, 3, seed=8)
+    assert other != masks
+    with pytest.raises(ValueError, match="unique sample ids"):
+        vertical_split(np.array([1, 1, 2]), 4, 2)
+    with pytest.raises(ValueError, match="cannot slice"):
+        vertical_split(ids, 2, 3)
+
+
+def test_vertical_3silo_socket_round():
+    """The examples/vertical_fedkt.py scenario at tiny config: three
+    feature-masked silos (nn + rf + gbdt), every party holding ALL
+    samples and a disjoint column slice, one real-TCP round — all three
+    fold into ONE shared example domain, with measured framed wire
+    bytes reported per domain."""
+    data = tabular_binary(n=300, seed=0)
+    n_rows = len(data["X_train"])
+    row_order, masks = vertical_split(np.arange(n_rows), 14, 3, seed=0)
+    bindings = [
+        PartyBinding(NNLearner(MLP(len(masks[0]), 2, hidden=8),
+                               num_classes=2, steps=10,
+                               feature_mask=masks[0])),
+        PartyBinding(RFLearner(num_classes=2, num_trees=4, depth=3,
+                               feature_mask=masks[1]), engine="vmap"),
+        PartyBinding(GBDTLearner(num_classes=2, num_rounds=4, depth=3,
+                                 feature_mask=masks[2]), engine="vmap"),
+    ]
+    cfg = FedKTConfig(num_parties=3, num_partitions=1, num_subsets=2,
+                      num_classes=2, seed=0)
+    final = NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=10)
+    res = FedKTSession(bindings, data, cfg, final_learner=final,
+                       party_indices=[row_order.copy() for _ in range(3)],
+                       transport=SocketTransport(parallelism=3)).run()
+    assert 0.0 <= res.accuracy <= 1.0
+    (ident,) = res.by_domain                    # ONE shared domain
+    row = res.by_domain[ident]
+    assert row["vote"].domain.unit == "example"
+    assert row["parties"] == [0, 1, 2]
+    assert len(row["labels"]) == len(data["X_public"])
+    assert res.meta["wire_bytes"]["by_domain"][ident] == \
+        res.meta["wire_bytes"]["updates"]
+    assert len(res.meta["socket"]["framed_bytes"]) == 3
+
+
+def test_vertical_masks_actually_restrict_features():
+    """A feature-masked learner's predictions depend ONLY on its
+    columns: perturbing off-mask columns never changes its output."""
+    data = tabular_binary(n=256, seed=0)
+    mask = (0, 3, 5)
+    lrn = RFLearner(num_classes=2, num_trees=4, depth=3,
+                    feature_mask=mask)
+    st = lrn.fit(jax.random.PRNGKey(0), data["X_train"][:128],
+                 data["y_train"][:128])
+    X = data["X_test"][:32].copy()
+    base = np.asarray(lrn.predict(st, X))
+    X_off = X.copy()
+    off_cols = [c for c in range(14) if c not in mask]
+    X_off[:, off_cols] = 999.0
+    np.testing.assert_array_equal(base,
+                                  np.asarray(lrn.predict(st, X_off)))
+    X_on = X.copy()
+    X_on[:, list(mask)] = 999.0
+    assert not np.array_equal(base, np.asarray(lrn.predict(st, X_on)))
+
+
+def test_vertical_example_compiles():
+    """The annotated walkthrough stays importable (tier-1 guards the
+    tiny-config scenario above; the example itself is the full-size
+    narration)."""
+    import pathlib
+    src = (pathlib.Path(__file__).parent.parent / "examples"
+           / "vertical_fedkt.py").read_text()
+    compile(src, "examples/vertical_fedkt.py", "exec")
+
+
+# ---------------------------------------------------------------------------
+# Launcher validation (the --learners bugfix)
+# ---------------------------------------------------------------------------
+def _args(**kw):
+    ns = argparse.Namespace(parties=3, learner="nn", learners=None)
+    for k, v in kw.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def test_federate_unknown_learner_kind_names_party():
+    """--learners with an unknown kind fails UP FRONT with the party
+    index and the registered kinds — not as a stray exception mid-round
+    on some host."""
+    with pytest.raises(SystemExit) as exc:
+        federate.party_kinds(_args(learners="nn,bogus,rf"))
+    msg = str(exc.value)
+    assert "bogus" in msg and "party 1" in msg
+    assert "nn" in msg and "rf" in msg and "gbdt" in msg
+    assert "lm" in msg                 # the registry's wire kinds
+    with pytest.raises(SystemExit, match="2 kinds"):
+        federate.party_kinds(_args(learners="nn,rf"))
+    assert federate.party_kinds(_args(learners="nn, rf ,gbdt")) == \
+        ["nn", "rf", "gbdt"]
+    assert federate.party_kinds(_args()) == ["nn", "nn", "nn"]

@@ -250,6 +250,99 @@ def test_codec_mixed_learner_update_roundtrip_property(seed, kind,
     _tree_equal(out.student_states, upd.student_states)
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["nn", "rf", "lm", None]),
+       st.sampled_from(["example", "token", None]),
+       st.integers(1, 500), st.integers(1, 70),
+       st.sampled_from([None, "fp", "names"]))
+def test_codec_domain_header_roundtrip_property(seed, kind, unit, T, U,
+                                                flavor):
+    """The vote-domain wire contract: a PartyUpdate declaring ANY
+    VoteDomain — either unit, any (T, U), fingerprinted or anonymous,
+    with or without label_names — round-trips through the codec with
+    the domain's full identity key AND its learner_kind intact;
+    undeclared (None) stays None."""
+    from repro.federation import VoteDomain
+
+    rng = np.random.default_rng(seed)
+    dom = None
+    if unit is not None:
+        dom = VoteDomain(
+            unit=unit, num_units=T, num_classes=U,
+            fingerprint=(f"{rng.integers(2**32):08x}"
+                         if flavor == "fp" else None),
+            label_names=(tuple(f"c{i}" for i in range(U))
+                         if flavor == "names" and U <= 8 else None))
+    upd = PartyUpdate(
+        party_id=int(rng.integers(0, 100)),
+        student_states=[{"w": rng.normal(0, 1, (2, 3)
+                                         ).astype(np.float32)}],
+        vote_gaps=rng.normal(0, 1, 4).astype(np.float32),
+        num_examples=int(rng.integers(1, 100)),
+        learner_kind=kind, domain=dom,
+        meta={"num_query_labels": T})
+    buf = codec.encode_update(upd)
+    assert codec.update_encoded_nbytes(upd) == len(buf)
+    out = codec.decode_update(buf)
+    assert out.learner_kind == kind
+    if dom is None:
+        assert out.domain is None
+    else:
+        assert out.domain == dom and out.domain.key == dom.key
+        assert out.domain.label_names == dom.label_names
+
+
+def test_codec_legacy_frame_decodes_to_no_domain():
+    """A pre-domain peer at the SAME codec version never sets the
+    header's "domain" key at all (not even to null).  Such a frame must
+    decode to domain=None — the "undeclared" sentinel the aggregate
+    resolves from the party's binding — with every other field intact."""
+    states = [{"w": np.arange(6, dtype=np.float32).reshape(2, 3)}]
+    gaps = np.arange(3, dtype=np.float64)
+    legacy_header = {"kind": "PartyUpdate", "party_id": 7,
+                     "num_examples": 42, "learner_kind": "rf",
+                     "meta": {"num_teachers": 2}}   # no "domain" key
+    buf = codec.encode({"student_states": states, "vote_gaps": gaps},
+                       legacy_header)
+    out = codec.decode_update(buf)
+    assert out.domain is None
+    assert out.party_id == 7 and out.learner_kind == "rf"
+    assert out.num_examples == 42
+    np.testing.assert_array_equal(out.vote_gaps, gaps)
+    _tree_equal(out.student_states, states)
+    # and a same-version frame that DOES declare is byte-compatible:
+    # only the header field differs
+    assert buf[:4] == codec.encode_update(PartyUpdate(
+        party_id=7, student_states=states, vote_gaps=gaps,
+        num_examples=42, learner_kind="rf",
+        meta={"num_teachers": 2}))[:4]
+
+
+def test_codec_domain_frame_truncation_sweep():
+    """EVERY strict prefix of a domain-extended frame raises — the
+    header grew (domain + learner_kind ride in it), so the truncation
+    guarantee is re-proved over the extended header, not grandfathered
+    from the pre-domain frame layout."""
+    from repro.federation import VoteDomain
+
+    upd = PartyUpdate(
+        party_id=1,
+        student_states=[{"w": np.arange(4, dtype=np.float32)}],
+        vote_gaps=np.arange(3, dtype=np.float64), num_examples=9,
+        learner_kind="nn",
+        domain=VoteDomain("example", 8, 2, fingerprint="deadbeef",
+                          label_names=("neg", "pos")),
+        meta={"num_teachers": 1})
+    buf = codec.encode_update(upd)
+    for n in range(len(buf)):
+        with pytest.raises(ValueError):
+            codec.decode(buf[:n])
+    out = codec.decode_update(buf)          # the full frame is intact
+    assert out.domain == upd.domain
+    assert out.domain.label_names == ("neg", "pos")
+
+
 # ---------------------------------------------------------------------------
 # Wire accounting
 # ---------------------------------------------------------------------------

@@ -24,7 +24,11 @@ transport: each party ships its update through a real localhost TCP
 connection, and the server streams arrivals into one running vote
 histogram (retain_students=False — constant memory in the party
 count).  The row records the measured framed bytes that crossed the
-sockets and the streamed round's wall-clock.
+sockets and the streamed round's wall-clock.  A companion row
+(nn_fleet_socket_journal) reruns the same fleet with the write-ahead
+round journal on — every accepted frame fsync'd before its ACK — and
+records the fsync overhead relative to the journal-less row plus the
+journal's on-disk footprint.
 
 A fifth, heterogeneous row (het_mixed_3way) federates one rf, one
 gbdt, and one nn silo through per-party bindings — trees on the vmap
@@ -231,6 +235,57 @@ def bench_fleet_socket(repeats):
     return row
 
 
+def bench_fleet_socket_journal(repeats):
+    """Crash-safety overhead row: the SAME 128-party streamed round as
+    nn_fleet_socket, but with the write-ahead round journal on — every
+    accepted frame is appended and fsync'd before its ACK/fold.  The
+    headline number is the journal's cost on the fleet round's
+    wall-clock (bench() records the warm ratio vs the journal-less
+    row); the journal file size is the durability footprint of the
+    whole round."""
+    import tempfile
+    from repro.federation.net import SocketTransport
+    learner, data, cfg, desc = fleet_setup()
+    rows_n = (len(data["X_train"]) // cfg.num_parties) * cfg.num_parties
+    shards = np.array_split(np.arange(rows_n), cfg.num_parties)
+    path = os.path.join(tempfile.mkdtemp(), "fleet.jrnl")
+    row = {"config": {"num_parties": cfg.num_parties,
+                      "num_partitions": cfg.num_partitions,
+                      "num_subsets": cfg.num_subsets,
+                      "learner": desc, "engine": "loop",
+                      "parallelism": 8,
+                      "retain_students": False,
+                      "journal": True}}
+
+    def one_run():
+        if os.path.exists(path):
+            os.remove(path)     # each run is a FRESH round, not a resume
+        return FedKTSession(
+            learner, data, cfg, engine="loop", party_indices=shards,
+            retain_students=False,
+            transport=SocketTransport(parallelism=8,
+                                      journal_path=path)).run()
+
+    t0 = time.time()
+    res = one_run()
+    cold = time.time() - t0
+    warms = []
+    for _ in range(repeats):
+        t0 = time.time()
+        res = one_run()
+        warms.append(time.time() - t0)
+    report = res.meta["socket"]
+    row["cold_s"] = round(cold, 3)
+    row["warm_s"] = round(sorted(warms)[len(warms) // 2], 3)
+    row["warm_runs_s"] = [round(w, 3) for w in warms]
+    row["accuracy"] = round(res.accuracy, 4)
+    row["arrived"] = len(report["arrived"])
+    row["journal_bytes"] = os.path.getsize(path)
+    row["fsyncs"] = cfg.num_parties + 1        # header + one per frame
+    os.remove(path)
+    return row
+
+
 def het_setup():
     from repro.core.learners import GBDTLearner
     from repro.federation import PartyBinding
@@ -378,6 +433,11 @@ def bench(repeats=REPEATS, write=True, names=None):
         rec["benches"]["nn_parallel_parties"] = bench_parallel_parties(
             nn_setup, repeats)
         rec["benches"]["nn_fleet_socket"] = bench_fleet_socket(repeats)
+        jrow = bench_fleet_socket_journal(repeats)
+        base = rec["benches"]["nn_fleet_socket"]["transports"]["socket"]
+        jrow["warm_overhead_vs_nn_fleet_socket"] = round(
+            jrow["warm_s"] / base["warm_s"], 3)
+        rec["benches"]["nn_fleet_socket_journal"] = jrow
         rec["benches"]["het_mixed_3way"] = bench_het_mixed(repeats)
         rec["benches"]["vertical_3silo"] = bench_vertical(repeats)
     if write:

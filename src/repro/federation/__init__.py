@@ -27,8 +27,18 @@
     net.SocketTransport             — the fleet: updates over real TCP,
                                       streamed into the running vote
                                       aggregate, deadline/quorum
-                                      straggler semantics
-                                      (docs/federation.md)
+                                      straggler semantics, and crash
+                                      recovery via the write-ahead
+                                      journal (docs/federation.md)
+    journal.RoundJournal            — fsync'd write-ahead log of
+                                      accepted frames: a restarted
+                                      coordinator replays it and waits
+                                      only for the missing parties
+    faults.FaultPlan / ChaosProxy   — seeded fault injection: scripted
+                                      connection faults in an in-path
+                                      TCP proxy, plus the coordinator
+                                      kill window (tests/test_faults.py,
+                                      launch/federate.py --chaos)
     aggregate.StreamingVoteAggregate— the server's running fold:
                                       constant memory in the party
                                       count, bit-identical to the batch
@@ -61,8 +71,12 @@ from repro.federation.engines import (Engine, LMEngine,  # noqa: F401
 from repro.federation.messages import (PartyUpdate,  # noqa: F401
                                        RoundResult, TokenLabels,
                                        label_wire_bytes, pytree_bytes)
+from repro.federation.faults import ChaosProxy, Fault, FaultPlan  # noqa: F401
+from repro.federation.journal import (JournalError,  # noqa: F401
+                                      JournalExistsError, RoundJournal)
 from repro.federation.net import (Coordinator, QuorumError,  # noqa: F401
-                                  SocketTransport, run_party_client)
+                                  SocketTransport, UpdateRefused,
+                                  run_party_client)
 from repro.federation.party import Party  # noqa: F401
 from repro.federation.server import Server  # noqa: F401
 from repro.federation.session import (FedKTSession,  # noqa: F401

@@ -3,7 +3,8 @@
 A serialized message is self-describing — no pytree template on the
 receiving side:
 
-    MAGIC "FKT" | version byte | uint32 header_len | header JSON | payload
+    MAGIC "FKT" | version byte | uint32 header_len | header JSON
+                | payload | uint32 crc32 trailer          (v3)
 
 The version byte is the cross-host compatibility gate: a peer speaking
 a different encoding (including the pre-version b"FKT1" frames, whose
@@ -12,6 +13,18 @@ mismatch" error instead of a garbage decode.  ``decode`` also validates
 the frame length against the header's leaf table, so a truncated frame
 raises instead of silently mis-parsing — both matter once frames cross
 real sockets (federation/net.py) rather than a same-process queue.
+
+v3 added the crc32 trailer (of every byte before it) so CORRUPTION —
+a frame damaged in transit or at rest in the round journal — is caught
+before any leaf is rebuilt, as a typed ``CorruptFrameError`` the socket
+coordinator maps to a ``corrupt`` NAK reason the party may retry
+(federation/net.py), never a stray decode exception mid-fold.  v2
+frames (no trailer) still decode, so pre-CRC peers interoperate; v3
+peers also demand the frame be EXACT (no trailing slack), closing the
+flipped-version-byte downgrade that would otherwise skip the CRC.  The
+typed errors all subclass ``CodecError`` (a ValueError):
+``TruncatedFrameError`` (cut short at any stage), ``CorruptFrameError``
+(CRC mismatch / unparseable header), ``VersionMismatchError``.
 
 The header carries the tree structure (dict/list/tuple/None nesting,
 leaves referenced by their checkpoint-style '/'-joined key path) plus
@@ -33,6 +46,7 @@ from __future__ import annotations
 
 import json
 import struct
+import zlib
 from typing import Any, Dict, List, Tuple
 
 import numpy as np
@@ -43,10 +57,30 @@ from repro.federation.messages import (PartyUpdate, TokenLabels,
                                        label_wire_bytes)
 
 MAGIC = b"FKT"
-VERSION = 2          # bumped from the implicit v1 (b"FKT1" magic) when
-#                      the version byte became part of the frame
+VERSION = 3          # v2 added the version byte itself; v3 the crc32
+#                      trailer (v2 frames still decode — no trailer)
+_DECODABLE = (2, VERSION)
 _PREFIX = MAGIC + bytes([VERSION])
 _LEN = struct.Struct("<I")
+_CRC = struct.Struct("<I")
+
+
+class CodecError(ValueError):
+    """Base for every refusal to decode a frame."""
+
+
+class TruncatedFrameError(CodecError):
+    """The frame was cut short — at the prefix, header, payload, or
+    crc trailer."""
+
+
+class CorruptFrameError(CodecError):
+    """The frame is the right length but its bytes are damaged: the
+    crc32 trailer does not match, or the header is unparseable."""
+
+
+class VersionMismatchError(CodecError):
+    """The frame speaks a codec version this peer cannot decode."""
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -104,57 +138,91 @@ def _header(tree, extra: Dict[str, Any] = None) -> Tuple[bytes, list]:
 
 
 def encode(tree, extra_header: Dict[str, Any] = None) -> bytes:
-    """Serializes a pytree of arrays into one self-describing buffer."""
+    """Serializes a pytree of arrays into one self-describing buffer,
+    crc32 of everything before it in the 4-byte trailer."""
     hdr, ordered = _header(tree, extra_header)
     parts = [_PREFIX, _LEN.pack(len(hdr)), hdr]
     parts += [np.ascontiguousarray(np.asarray(leaf)).tobytes()
               for _, leaf in ordered]
-    return b"".join(parts)
+    body = b"".join(parts)
+    return body + _CRC.pack(zlib.crc32(body))
 
 
 def encoded_nbytes(tree, extra_header: Dict[str, Any] = None) -> int:
-    """Exact wire size of ``encode(tree)`` — header, framing, payload —
-    computed from leaf shapes/dtypes only.  Works on concrete arrays and
-    on ShapeDtypeStructs (jax.eval_shape), so full-size LM messages can
-    be priced without materializing a single parameter."""
+    """Exact wire size of ``encode(tree)`` — header, framing, payload,
+    crc trailer — computed from leaf shapes/dtypes only.  Works on
+    concrete arrays and on ShapeDtypeStructs (jax.eval_shape), so
+    full-size LM messages can be priced without materializing a single
+    parameter."""
     hdr, ordered = _header(tree, extra_header)
     payload = sum(int(np.prod(leaf.shape, dtype=np.int64))
                   * np.dtype(leaf.dtype).itemsize for _, leaf in ordered)
-    return len(_PREFIX) + _LEN.size + len(hdr) + payload
+    return len(_PREFIX) + _LEN.size + len(hdr) + payload + _CRC.size
 
 
 def decode(buf: bytes) -> Tuple[Any, Dict[str, Any]]:
     """Inverse of ``encode``: (pytree of numpy arrays, header dict).
 
-    Raises ValueError — never mis-parses — on a frame that is not ours
-    (bad magic), speaks a different codec version, or was cut short
-    anywhere (prefix, header, payload): the network path depends on
-    truncation being loud.
+    Raises a typed CodecError (a ValueError) — never mis-parses — on a
+    frame that is not ours (bad magic), speaks a version this peer
+    cannot decode, was cut short anywhere (prefix, header, payload,
+    trailer), or fails its crc32 (corrupted in transit or at rest):
+    the network and journal paths depend on damage being loud.  The
+    crc is verified before any leaf is rebuilt.
     """
     if buf[:len(MAGIC)] != MAGIC:
-        raise ValueError("not a federation codec buffer (bad magic)")
+        raise CodecError("not a federation codec buffer (bad magic)")
     if len(buf) < len(_PREFIX) + _LEN.size:
-        raise ValueError(f"truncated codec frame: {len(buf)} bytes is "
-                         f"shorter than the fixed prefix")
-    if buf[len(MAGIC)] != VERSION:
-        raise ValueError(
-            f"codec version mismatch: frame speaks v{buf[len(MAGIC)]}, "
-            f"this peer speaks v{VERSION} — refusing to decode an "
-            f"incompatible encoding")
+        raise TruncatedFrameError(
+            f"truncated codec frame: {len(buf)} bytes is shorter than "
+            f"the fixed prefix")
+    version = buf[len(MAGIC)]
+    if version not in _DECODABLE:
+        raise VersionMismatchError(
+            f"codec version mismatch: frame speaks v{version}, "
+            f"this peer speaks v{VERSION} (and still decodes "
+            f"v{_DECODABLE[0]}) — refusing to decode an incompatible "
+            f"encoding")
+    trailer = _CRC.size if version >= 3 else 0
     hlen = _LEN.unpack_from(buf, len(_PREFIX))[0]
     start = len(_PREFIX) + _LEN.size
-    if len(buf) < start + hlen:
-        raise ValueError(f"truncated codec frame: header says "
-                         f"{hlen} bytes but only {len(buf) - start} "
-                         f"follow the prefix")
-    header = json.loads(buf[start:start + hlen].decode("utf-8"))
+    if len(buf) < start + hlen + trailer:
+        raise TruncatedFrameError(
+            f"truncated codec frame: header says {hlen} bytes but only "
+            f"{len(buf) - start} follow the prefix")
+    try:
+        header = json.loads(buf[start:start + hlen].decode("utf-8"))
+    except ValueError as err:
+        raise CorruptFrameError(
+            f"corrupt codec frame: header is not parseable JSON "
+            f"({err}) — damaged in transit or at rest") from err
     base = start + hlen
-    payload = max((leaf["off"] + leaf["n"]
-                   for leaf in header["leaves"]), default=0)
-    if len(buf) < base + payload:
-        raise ValueError(f"truncated codec frame: payload needs "
-                         f"{payload} bytes, frame carries "
-                         f"{len(buf) - base}")
+    try:
+        payload = max((leaf["off"] + leaf["n"]
+                       for leaf in header["leaves"]), default=0)
+    except (KeyError, TypeError) as err:
+        raise CorruptFrameError(
+            f"corrupt codec frame: header carries no well-formed leaf "
+            f"table ({err!r})") from err
+    if len(buf) < base + payload + trailer:
+        raise TruncatedFrameError(
+            f"truncated codec frame: payload needs {payload} bytes "
+            f"(+{trailer} trailer), frame carries {len(buf) - base}")
+    # frames must be EXACT (both versions): trailing slack would let a
+    # flipped version byte smuggle a v3 frame past the crc as "v2"
+    if len(buf) != base + payload + trailer:
+        raise CorruptFrameError(
+            f"corrupt codec frame: {len(buf) - base - payload - trailer} "
+            f"trailing bytes beyond the "
+            f"{'crc trailer' if trailer else 'payload'}")
+    if trailer:
+        stored = _CRC.unpack_from(buf, base + payload)[0]
+        computed = zlib.crc32(memoryview(buf)[:base + payload])
+        if stored != computed:
+            raise CorruptFrameError(
+                f"corrupt codec frame: crc32 trailer says "
+                f"0x{stored:08x} but the frame hashes to "
+                f"0x{computed:08x} — damaged in transit or at rest")
     arrays = {}
     for leaf in header["leaves"]:
         dtype = _np_dtype(leaf["dtype"])

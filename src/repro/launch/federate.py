@@ -18,6 +18,16 @@ in-process session seed-for-seed:
                  PartyUpdate to the coordinator (connect retries with
                  exponential backoff baked in).
 
+Crash safety: ``--journal PATH`` makes the coordinator write-ahead
+journal every accepted frame (fsync'd before the ACK), and
+``--resume`` replays that journal after a crash — the restarted round
+refolds the already-delivered parties and waits only for the missing
+ones, so no silo ever retrains because the server died.  ``--chaos``
+(with ``--chaos-seed``) runs the local fleet through a seeded
+fault-injection proxy — corrupted frames, killed connections, dropped
+ACKs, duplicate deliveries — as a soak of exactly those guarantees;
+the faults that fired are reported under ``"chaos"``.
+
 Every role accepts ``--learner`` (uniform model family: nn | rf |
 gbdt) or ``--learners rf,gbdt,nn,...`` (one kind per party) — a real
 TCP fleet can mix tree and neural silos in one round because the vote
@@ -152,21 +162,44 @@ def build_session(args, transport) -> FedKTSession:
 
 def _report(result) -> None:
     sock = result.meta.get("socket", {})
-    print(json.dumps({
+    out = {
         "accuracy": round(float(result.accuracy), 4),
         "epsilon": result.epsilon,
         "arrived": len(sock.get("arrived", [])),
         "dropped_parties": result.meta.get("dropped_parties", []),
         "wire_bytes": result.meta["wire_bytes"],
         "seconds": result.meta["seconds"],
-    }, indent=1))
+    }
+    if sock.get("journal"):
+        out["journal"] = sock["journal"]
+        out["resumed"] = sock.get("resumed", False)
+        out["replayed_parties"] = sock.get("replayed_parties", [])
+        out["corrupt_records_dropped"] = \
+            sock.get("corrupt_records_dropped", 0)
+        out["re_acked"] = sock.get("re_acked", {})
+    if "chaos" in sock:
+        out["chaos"] = sock["chaos"]
+    print(json.dumps(out, indent=1))
+
+
+def _chaos_plan(args):
+    """The local soak's seeded fault schedule: enough scripted faults
+    to cover every party a few times over (retransmits get their own
+    connection ordinals), reproducible from --chaos-seed."""
+    if not args.chaos:
+        return None
+    from repro.federation.faults import FaultPlan
+    return FaultPlan.random(args.chaos_seed, 3 * args.parties)
 
 
 def run_local(args) -> None:
     transport = SocketTransport(parallelism=args.parallelism,
                                 port=args.port,
                                 deadline_s=args.deadline_s,
-                                min_parties=args.min_parties)
+                                min_parties=args.min_parties,
+                                journal_path=args.journal,
+                                resume=args.resume,
+                                chaos_plan=_chaos_plan(args))
     result = build_session(args, transport).run(verbose=args.verbose)
     _report(result)
 
@@ -175,11 +208,16 @@ def run_coordinator(args) -> None:
     transport = SocketTransport(host=args.host, port=args.port,
                                 spawn=False,
                                 deadline_s=args.deadline_s,
-                                min_parties=args.min_parties)
+                                min_parties=args.min_parties,
+                                journal_path=args.journal,
+                                resume=args.resume)
     print(f"coordinator: waiting for {args.parties} parties on "
           f"{args.host}:{args.port} (deadline "
           f"{args.deadline_s}s, quorum "
-          f"{args.min_parties or args.parties})")
+          f"{args.min_parties or args.parties})"
+          + (f"; journaling to {args.journal}"
+             + (" [resume]" if args.resume else "")
+             if args.journal else ""))
     result = build_session(args, transport).run(verbose=args.verbose)
     _report(result)
 
@@ -245,6 +283,22 @@ def main():
                     help="fold-and-drop updates (constant server "
                          "memory; RoundResult carries no student "
                          "states)")
+    ap.add_argument("--journal", default=None,
+                    help="local/coordinator: write-ahead journal file; "
+                         "every accepted update is fsync'd here before "
+                         "it is ACKed, so a crashed round resumes")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay an existing --journal: refold the "
+                         "already-delivered parties and wait only for "
+                         "the missing ones")
+    ap.add_argument("--chaos", action="store_true",
+                    help="local role: route party deliveries through a "
+                         "seeded fault-injection proxy (corrupt / kill "
+                         "/ delay / duplicate / dropped-ACK) — a soak "
+                         "of the crash-safety layer")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the --chaos fault schedule (same "
+                         "seed, same faults)")
     ap.add_argument("--retries", type=int, default=8,
                     help="party role: connect attempts")
     ap.add_argument("--backoff-s", type=float, default=0.05,

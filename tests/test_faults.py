@@ -1,0 +1,453 @@
+"""Crash safety under deterministic fault injection: the write-ahead
+round journal, coordinator resume, idempotent (send-until-ACK) delivery,
+and NAK reason codes — driven by the seeded chaos harness in
+federation/faults.py.  The load-bearing claim throughout: a round that
+is crashed, corrupted, or duplicated mid-flight finishes BIT-IDENTICAL
+to the uninterrupted serial loop."""
+import os
+import socket
+import struct
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedKTConfig
+from repro.core.learners import GBDTLearner, NNLearner, RFLearner
+from repro.data.synthetic import tabular_binary
+from repro.federation import (ChaosProxy, Fault, FaultPlan, FedKTSession,
+                              JournalExistsError, QuorumError,
+                              RoundJournal, SocketTransport,
+                              UpdateRefused)
+from repro.federation.codec import encode_update
+from repro.federation.engines import LoopEngine
+from repro.federation.net import (ACK, NAK, NAK_CORRUPT, NAK_DUPLICATE,
+                                  NAK_UNKNOWN_PARTY, Coordinator,
+                                  send_update_frame)
+from repro.federation.party import Party
+from repro.models.smallnets import MLP
+
+
+@pytest.fixture(scope="module")
+def data():
+    return tabular_binary(n=512, seed=0)
+
+
+def make_nn():
+    return NNLearner(MLP(14, 2, hidden=8), num_classes=2, steps=20)
+
+
+@pytest.fixture(scope="module")
+def learner():
+    return make_nn()
+
+
+CFG2 = dict(num_parties=2, num_partitions=1, num_subsets=2,
+            num_classes=2, privacy_level="L2", gamma=0.1,
+            query_fraction=0.5, seed=7)
+
+
+def _tree_equal(a, b):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for la, lb in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _assert_same_round(res, ref):
+    assert res.accuracy == ref.accuracy
+    assert res.epsilon == ref.epsilon
+    _tree_equal(res.student_states, ref.student_states)
+    assert res.meta["wire_bytes"] == ref.meta["wire_bytes"]
+
+
+def _frame_for(data, learner, pid=0):
+    """One real encoded PartyUpdate frame for raw-socket tests."""
+    party = Party(party_id=pid, X=data["X_train"], y=data["y_train"],
+                  indices=np.arange(96), cfg=FedKTConfig(**CFG2),
+                  learner=learner, student_learner=learner)
+    upd, _ = party.local_round(jax.random.PRNGKey(pid),
+                               data["X_public"], 16, LoopEngine())
+    return encode_update(upd)
+
+
+def _raw_frame(port, payload):
+    """Sends one raw frame; returns the full (1-2 byte) reply."""
+    with socket.create_connection(("127.0.0.1", port), timeout=10) as s:
+        s.sendall(struct.pack("<I", len(payload)) + payload)
+        return s.recv(2)
+
+
+# ---------------------------------------------------------------------------
+# RoundJournal: durability format, replay, torn tails
+# ---------------------------------------------------------------------------
+def test_journal_roundtrip_and_resume_refusal(tmp_path):
+    """Appended frames replay in order; a non-empty journal refuses to
+    open without resume (never silently folds a stale round), and a
+    journaled party refuses re-append (retransmits re-ACK instead)."""
+    path = tmp_path / "round.jrnl"
+    with RoundJournal(path) as j:
+        j.append(0, b"frame-zero")
+        j.append(2, b"frame-two")
+        assert j.journaled_parties == [0, 2]
+        with pytest.raises(ValueError, match="already journaled"):
+            j.append(0, b"frame-zero")
+    with pytest.raises(JournalExistsError, match="resume"):
+        RoundJournal(path)
+    with RoundJournal(path, resume=True) as j2:
+        assert j2.resumed and dict(j2.records) == {0: b"frame-zero",
+                                                   2: b"frame-two"}
+        assert j2.corrupt_records_dropped == 0
+        assert not j2.truncated_tail
+
+
+def test_journal_truncates_torn_tail(tmp_path):
+    """A record cut short by the crash (the fsync never finished) is
+    truncated off the file, and the journal stays appendable — the
+    interrupted party's retransmit lands on a clean prefix."""
+    path = tmp_path / "round.jrnl"
+    with RoundJournal(path) as j:
+        j.append(0, b"frame-zero")
+        j.append(1, b"frame-one")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 3)             # tear party 1's frame
+    with RoundJournal(path, resume=True) as j2:
+        assert j2.truncated_tail
+        assert j2.journaled_parties == [0]
+        assert os.path.getsize(path) < size - 3   # tail actually cut
+        j2.append(1, b"frame-one")       # the retransmit re-journals
+    with RoundJournal(path, resume=True) as j3:
+        assert dict(j3.records) == {0: b"frame-zero", 1: b"frame-one"}
+        assert not j3.truncated_tail
+
+
+def test_journal_drops_corrupt_record_and_recovers(tmp_path):
+    """A crc-failed record is skipped and counted; its party is NOT
+    marked seen, so a fresh delivery re-journals it and a later resume
+    replays the good copy."""
+    path = tmp_path / "round.jrnl"
+    with RoundJournal(path) as j:
+        j.append(0, b"frame-zero")
+        j.append(1, b"frame-one")
+    raw = open(path, "rb").read()
+    k = raw.index(b"frame-zero")
+    with open(path, "wb") as f:          # flip one stored byte
+        f.write(raw[:k] + b"X" + raw[k + 1:])
+    with RoundJournal(path, resume=True) as j2:
+        assert j2.corrupt_records_dropped == 1
+        assert j2.journaled_parties == [1]
+        j2.append(0, b"frame-zero")      # fresh delivery recovers
+    with RoundJournal(path, resume=True) as j3:
+        assert dict(j3.records) == {1: b"frame-one", 0: b"frame-zero"}
+        assert j3.corrupt_records_dropped == 1   # stale record remains
+
+
+def test_journal_frame_matches_is_byte_exact(tmp_path):
+    """The re-ACK decision compares actual stored bytes, not just the
+    (length, crc) digest — a crc collision can never smuggle a
+    different update past the idempotency check."""
+    path = tmp_path / "round.jrnl"
+    with RoundJournal(path) as j:
+        j.append(3, b"frame-three")
+        assert j.frame_matches(3, b"frame-three")
+        assert not j.frame_matches(3, b"frame-THREE")
+        assert not j.frame_matches(4, b"frame-three")
+
+
+# ---------------------------------------------------------------------------
+# NAK reason codes and the retry loop (satellite: send_update_frame fix)
+# ---------------------------------------------------------------------------
+def test_fatal_nak_raises_immediately_with_reason(data, learner):
+    """An unknown party is refused with reason ``unknown-party`` and
+    the client raises UpdateRefused at once — no backoff is slept on a
+    refusal retrying cannot fix (the old loop slept the full schedule
+    before giving a reasonless error)."""
+    coord = Coordinator([0, 1], port=0).start()
+    try:
+        frame = _frame_for(data, learner, pid=9)
+        t0 = time.monotonic()
+        with pytest.raises(UpdateRefused, match="unknown-party") as exc:
+            send_update_frame("127.0.0.1", coord.port, frame,
+                              retries=8, backoff_s=0.5)
+        assert time.monotonic() - t0 < 2.0    # schedule would be >60s
+        assert exc.value.reason == NAK_UNKNOWN_PARTY
+        assert not exc.value.retryable
+        assert "NAK" in str(exc.value)
+    finally:
+        coord.stop()
+
+
+def test_corrupt_nak_is_retryable_on_the_wire(data, learner):
+    """A frame damaged in flight is NAKed with reason ``corrupt`` —
+    and the same bytes sent clean afterwards are ACKed: the refusal
+    was about the transit, not the update."""
+    coord = Coordinator([0], port=0).start()
+    try:
+        frame = _frame_for(data, learner, pid=0)
+        bad = frame[:50] + bytes([frame[50] ^ 0xFF]) + frame[51:]
+        assert _raw_frame(coord.port, bad) == NAK + bytes([NAK_CORRUPT])
+        assert _raw_frame(coord.port, frame) == ACK
+        assert coord.updates.get_nowait().party_id == 0
+    finally:
+        coord.stop()
+
+
+def test_duplicate_with_different_bytes_is_fatal(data, learner):
+    """Idempotency covers RETRANSMITS, not replacements: a second
+    update from an already-folded party whose bytes differ is NAKed
+    ``duplicate`` — accepting it would fork the round's history."""
+    coord = Coordinator([0], port=0).start()
+    try:
+        party = Party(party_id=0, X=data["X_train"], y=data["y_train"],
+                      indices=np.arange(96), cfg=FedKTConfig(**CFG2),
+                      learner=learner, student_learner=learner)
+        upd_a, _ = party.local_round(jax.random.PRNGKey(0),
+                                     data["X_public"], 16, LoopEngine())
+        upd_b, _ = party.local_round(jax.random.PRNGKey(1),
+                                     data["X_public"], 16, LoopEngine())
+        assert _raw_frame(coord.port, encode_update(upd_a)) == ACK
+        assert _raw_frame(coord.port, encode_update(upd_b)) \
+            == NAK + bytes([NAK_DUPLICATE])
+        # the matching retransmit still re-ACKs afterwards
+        assert _raw_frame(coord.port, encode_update(upd_a)) == ACK
+        assert coord.re_acked == {0: 1}
+    finally:
+        coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: kill the coordinator mid-round, resume, bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_learner", [
+    make_nn,
+    lambda: RFLearner(num_classes=2, num_trees=3, depth=2),
+    lambda: GBDTLearner(num_rounds=3, depth=2),
+], ids=["nn", "rf", "gbdt"])
+def test_coordinator_killed_and_resumed_is_bit_identical(
+        tmp_path, data, make_learner):
+    """THE acceptance scenario: the coordinator dies in the worst
+    window — party 0's frame journaled but never ACKed, never folded —
+    and a restart with resume replays the journal, spawns only the
+    missing party, and finishes the round bit-identical to the
+    uninterrupted serial loop, for every learner kind."""
+    journal = str(tmp_path / "round.jrnl")
+    cfg = FedKTConfig(**CFG2)
+    lrn = make_learner()
+    ref = FedKTSession(lrn, data, cfg, engine="loop").run()
+
+    plan = FaultPlan(kill_coordinator_on_party=0)
+    crashed = SocketTransport(parallelism=1, journal_path=journal,
+                              chaos_plan=plan, connect_retries=2,
+                              backoff_s=0.01)
+    with pytest.raises(QuorumError):
+        FedKTSession(lrn, data, cfg, engine="loop",
+                     transport=crashed).run()
+    assert crashed.round_report["coordinator_killed"]
+    assert any("kill_coordinator" in line for line in plan.log)
+    # the crash window is covered: the frame IS durable despite no ACK
+    with RoundJournal(journal, resume=True) as j:
+        assert j.journaled_parties == [0]
+
+    resumed = SocketTransport(parallelism=2, journal_path=journal,
+                              resume=True)
+    res = FedKTSession(lrn, data, cfg, engine="loop",
+                       transport=resumed).run()
+    _assert_same_round(res, ref)
+    sock = res.meta["socket"]
+    assert sock["resumed"] is True
+    assert sock["replayed_parties"] == [0]
+    assert sock["corrupt_records_dropped"] == 0
+    assert sorted(sock["arrived"]) == [0, 1]
+
+
+def test_fully_journaled_round_resumes_without_spawning(tmp_path, data,
+                                                        learner):
+    """A journal holding EVERY party replays to a complete round with
+    no local rounds run at all — the restart-after-success case costs
+    nothing but the replay."""
+    journal = str(tmp_path / "round.jrnl")
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    first = FedKTSession(learner, data, cfg, engine="loop",
+                         transport=SocketTransport(
+                             parallelism=2, journal_path=journal)).run()
+    _assert_same_round(first, ref)
+
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=SocketTransport(
+                           parallelism=2, journal_path=journal,
+                           resume=True)).run()
+    _assert_same_round(res, ref)
+    sock = res.meta["socket"]
+    assert sock["replayed_parties"] == [0, 1]
+    assert sock["arrived"] and sorted(sock["arrived"]) == [0, 1]
+    # no training happened: the party phase is pure replay
+    assert res.meta["seconds"]["parties"] < \
+        first.meta["seconds"]["parties"]
+
+
+def test_journal_without_resume_refuses_stale_file(tmp_path, data,
+                                                   learner):
+    """Pointing a FRESH round at a journal that already holds records
+    fails loudly before any party trains — resuming must be an explicit
+    decision, not a default."""
+    journal = str(tmp_path / "round.jrnl")
+    with RoundJournal(journal) as j:
+        j.append(0, b"stale-frame")
+    cfg = FedKTConfig(**CFG2)
+    with pytest.raises(JournalExistsError, match="resume"):
+        FedKTSession(learner, data, cfg, engine="loop",
+                     transport=SocketTransport(
+                         parallelism=2, journal_path=journal)).run()
+
+
+# ---------------------------------------------------------------------------
+# Chaos proxy: scripted connection faults, end-to-end
+# ---------------------------------------------------------------------------
+def test_dropped_ack_retransmit_reacked_exactly_once(data, learner):
+    """The lost-ACK drill: the proxy swallows party 0's ACK, the client
+    retransmits identical bytes, the coordinator re-ACKs exactly once
+    and never double-folds — the round is bit-identical regardless."""
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    plan = FaultPlan({0: Fault("drop_ack")})
+    transport = SocketTransport(parallelism=1, chaos_plan=plan)
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=transport).run()
+    _assert_same_round(res, ref)
+    sock = res.meta["socket"]
+    assert sum(sock["re_acked"].values()) == 1
+    assert any("drop_ack" in line for line in sock["chaos"])
+    # exactly n updates folded: the retransmit never re-queued
+    assert len(sock["arrived"]) == 2
+
+
+def test_corrupted_frame_retried_through_proxy(data, learner):
+    """In-flight corruption on the first delivery: the coordinator NAKs
+    with reason ``corrupt``, the client treats it as retryable, and the
+    clean retransmit completes a bit-identical round."""
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    plan = FaultPlan({0: Fault("corrupt", at_byte=64)})
+    transport = SocketTransport(parallelism=1, chaos_plan=plan)
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=transport).run()
+    _assert_same_round(res, ref)
+    sock = res.meta["socket"]
+    assert any("corrupt" in e for e in sock["rejected"])
+    assert any("corrupt byte" in line for line in sock["chaos"])
+
+
+def test_killed_connection_retried_through_proxy(data, learner):
+    """A connection killed mid-frame (partial bytes reach the
+    coordinator) is survived by the client's send-until-ACK retry."""
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    plan = FaultPlan({0: Fault("kill_after", at_byte=100)})
+    transport = SocketTransport(parallelism=1, chaos_plan=plan)
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=transport).run()
+    _assert_same_round(res, ref)
+    assert any("kill_after" in line
+               for line in res.meta["socket"]["chaos"])
+
+
+def test_duplicate_delivery_never_double_folds(data, learner):
+    """The proxy redelivers party 0's frame on a fresh connection after
+    the real exchange: the coordinator re-ACKs it (idempotent) and the
+    round folds each party exactly once."""
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    plan = FaultPlan({0: Fault("duplicate")})
+    transport = SocketTransport(parallelism=1, chaos_plan=plan)
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=transport).run()
+    _assert_same_round(res, ref)
+    sock = res.meta["socket"]
+    assert len(sock["arrived"]) == 2
+    assert sum(sock["re_acked"].values()) == 1
+
+
+def test_seeded_two_party_chaos_smoke(tmp_path, data, learner):
+    """Tier-1 chaos smoke (mirrored in CI): a seeded random fault plan
+    over a journaled 2-party round — whatever the plan throws, the
+    round must finish bit-identical to the serial loop.  Same seed,
+    same faults, forever."""
+    cfg = FedKTConfig(**CFG2)
+    ref = FedKTSession(learner, data, cfg, engine="loop").run()
+    plan = FaultPlan.random(seed=3, n_connections=6, fault_rate=0.6,
+                            max_delay_s=0.05)
+    assert plan.faults, "seed 3 must schedule at least one fault"
+    transport = SocketTransport(
+        parallelism=1, journal_path=str(tmp_path / "chaos.jrnl"),
+        chaos_plan=plan)
+    res = FedKTSession(learner, data, cfg, engine="loop",
+                       transport=transport).run()
+    _assert_same_round(res, ref)
+    assert res.meta["socket"]["chaos"]   # something actually fired
+
+
+def test_fault_plan_is_reproducible():
+    """Chaos must replay: equal seeds give equal schedules, different
+    seeds (eventually) differ, and unknown fault kinds fail loudly."""
+    a = FaultPlan.random(seed=11, n_connections=32)
+    b = FaultPlan.random(seed=11, n_connections=32)
+    assert a.faults == b.faults
+    assert any(FaultPlan.random(seed=s, n_connections=32).faults
+               != a.faults for s in (12, 13, 14))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor-strike")
+
+
+def test_chaos_proxy_passthrough_when_unfaulted(data, learner):
+    """Ordinals with no scheduled fault relay untouched — the proxy in
+    the path must be invisible to a clean round."""
+    coord = Coordinator([0], port=0).start()
+    plan = FaultPlan({})
+    proxy = ChaosProxy("127.0.0.1", coord.port, plan).start()
+    try:
+        frame = _frame_for(data, learner, pid=0)
+        assert _raw_frame(proxy.port, frame) == ACK
+        assert coord.updates.get_nowait().party_id == 0
+        assert proxy.connections == 1 and plan.log == []
+    finally:
+        proxy.stop()
+        coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale soak (scheduled full run)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_fleet_32_party_chaos_soak(tmp_path, learner):
+    """32 parties through the chaos proxy under a seeded fault barrage
+    (corruption, killed connections, dropped ACKs, duplicates, delays)
+    with the journal on: the constant-memory round still finishes
+    bit-identical to the serial loop."""
+    fleet_data = tabular_binary(n=4096, seed=1)
+    cfg = FedKTConfig(num_parties=32, num_partitions=1, num_subsets=2,
+                      num_classes=2, privacy_level="L2", gamma=0.1,
+                      query_fraction=0.5, seed=11)
+    rows = (len(fleet_data["X_train"]) // 32) * 32
+    ix = np.array_split(np.arange(rows), 32)
+    ref = FedKTSession(learner, fleet_data, cfg, engine="loop",
+                       party_indices=ix).run()
+    plan = FaultPlan.random(seed=5, n_connections=96, fault_rate=0.3)
+    transport = SocketTransport(
+        parallelism=8, journal_path=str(tmp_path / "soak.jrnl"),
+        chaos_plan=plan)
+    res = FedKTSession(learner, fleet_data, cfg, engine="loop",
+                       party_indices=ix, retain_students=False,
+                       transport=transport).run()
+    assert res.accuracy == ref.accuracy
+    assert res.epsilon == ref.epsilon
+    assert res.student_states == []
+    assert res.meta["wire_bytes"] == ref.meta["wire_bytes"]
+    sock = res.meta["socket"]
+    assert sorted(sock["arrived"]) == list(range(32))
+    assert sock["chaos"], "the seeded barrage must actually fire"
+    # every accepted frame is durable: the journal holds the round
+    with RoundJournal(str(tmp_path / "soak.jrnl"), resume=True) as j:
+        assert j.journaled_parties == list(range(32))

@@ -344,6 +344,70 @@ def test_codec_domain_frame_truncation_sweep():
 
 
 # ---------------------------------------------------------------------------
+# CRC trailer (codec v3)
+# ---------------------------------------------------------------------------
+def _crc_test_frame():
+    upd = PartyUpdate(
+        party_id=1,
+        student_states=[{"w": np.arange(4, dtype=np.float32)}],
+        vote_gaps=np.arange(3, dtype=np.float64), num_examples=9,
+        learner_kind="nn", meta={"num_teachers": 1})
+    return codec.encode_update(upd)
+
+
+def test_codec_crc_trailer_detects_every_single_byte_flip():
+    """No single corrupted byte anywhere in a frame decodes silently:
+    magic/version damage is a codec error, header/payload/trailer
+    damage trips the crc32 trailer.  This is the property the socket
+    coordinator's NAK-with-reason-``corrupt`` path stands on
+    (tests/test_faults.py exercises it over a real wire)."""
+    buf = _crc_test_frame()
+    for k in range(len(buf)):
+        flipped = buf[:k] + bytes([buf[k] ^ 0xFF]) + buf[k + 1:]
+        with pytest.raises(ValueError):
+            codec.decode(flipped)
+    assert codec.decode_update(buf).party_id == 1   # strict loop above
+
+
+def test_codec_corruption_raises_typed_errors():
+    """The coordinator maps refusals to NAK reasons by exception type,
+    so the types are wire contract: corruption/truncation are
+    CorruptFrameError/TruncatedFrameError, an alien version is
+    VersionMismatchError, and all are CodecError ⊂ ValueError (old
+    ``except ValueError`` callers still catch everything)."""
+    buf = _crc_test_frame()
+    with pytest.raises(codec.CorruptFrameError, match="crc32"):
+        codec.decode(buf[:-1] + bytes([buf[-1] ^ 0x01]))
+    with pytest.raises(codec.TruncatedFrameError):
+        codec.decode(buf[:-1])
+    with pytest.raises(codec.CorruptFrameError, match="trailing"):
+        codec.decode(buf + b"\x00")
+    with pytest.raises(codec.VersionMismatchError):
+        codec.decode(buf[:3] + bytes([codec.VERSION + 1]) + buf[4:])
+    for exc in (codec.CorruptFrameError, codec.TruncatedFrameError,
+                codec.VersionMismatchError):
+        assert issubclass(exc, codec.CodecError)
+        assert issubclass(exc, ValueError)
+
+
+def test_codec_v2_frame_still_decodes():
+    """Version-bump compatibility: a v2 peer's frame (no crc trailer)
+    is the same bytes minus the trailer with version byte 2 — it must
+    decode to the identical update, and the pricing helper must agree
+    with the v3 trailer it now includes."""
+    buf = _crc_test_frame()
+    v2 = buf[:3] + bytes([2]) + buf[4:-4]      # strip the crc trailer
+    out = codec.decode_update(v2)
+    assert out.party_id == 1 and out.num_examples == 9
+    np.testing.assert_array_equal(out.vote_gaps,
+                                  np.arange(3, dtype=np.float64))
+    # a v2 frame with slack bytes is NOT tolerated: the downgrade path
+    # must never become a crc bypass
+    with pytest.raises(ValueError):
+        codec.decode(v2 + b"\x00\x00\x00\x00")
+
+
+# ---------------------------------------------------------------------------
 # Wire accounting
 # ---------------------------------------------------------------------------
 def test_update_wire_bytes_counts_gap_trace():

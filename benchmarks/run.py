@@ -25,6 +25,7 @@ MODULES = [
     "table10_voting",
     "engines_bench",
     "tree_fit_bench",
+    "serve_bench",
     "comm_overhead",
     "roofline",
 ]

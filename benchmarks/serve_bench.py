@@ -1,0 +1,167 @@
+"""Serving-tier benchmark: continuous-batching throughput and latency.
+
+Measures the ``repro.serving.Engine`` on the phi4-mini-3.8b smoke
+config (float32, CPU) at N in {1, 4, 16} concurrent streams, plus the
+fixed-batch ``serve_batch`` serial reference at the same token budget.
+Written to BENCH_serving.json at the repo root:
+
+  streams[N] : tok_per_s        — aggregate generated tokens / wall
+               p50/p95_token_latency_ms — per-token gap distribution
+                   across all streams (first token from admission)
+               cold_s / warm_s  — same workload with compiles on the
+                   clock (fresh engine, no warmup) vs after
+                   ``Engine.warmup`` (zero recompiles, test-enforced)
+  serial_reference : serve_batch stats at batch=4 for scale
+
+Streams are submitted open-loop with seeded exponential gaps so later
+arrivals land mid-decode — the continuous-batching case, not a batched
+closed loop.  N > slots exercises queueing + slot reuse.
+
+Tiny-config smoke: ``bench(tiny=True, write=False)`` runs the same
+code on the 1-layer LM in seconds — invoked from tier-1 tests so this
+script cannot rot.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+STREAMS = (1, 4, 16)
+GEN = 32
+
+
+def _percentile(xs, q):
+    return sorted(xs)[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
+
+
+def _make_prompts(cfg, n, max_len, seed):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(2, max_len + 1, n)
+    return [rng.integers(0, cfg.vocab_size, (int(p),)).astype(np.int32)
+            for p in lens]
+
+
+def _drive_open_loop(eng, prompts, gen, rate, seed):
+    """Seeded Poisson arrivals at ``rate`` req/s; returns (results,
+    wall seconds)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, len(prompts))
+    t0 = eng.clock()
+    deadlines = list(zip(t0 + np.cumsum(gaps), prompts))
+    results = []
+    while deadlines or not eng.scheduler.idle:
+        now = eng.clock()
+        while deadlines and deadlines[0][0] <= now:
+            eng.submit(deadlines.pop(0)[1], gen)
+        if eng.scheduler.idle and deadlines:
+            time.sleep(min(max(deadlines[0][0] - now, 0.0), 0.005))
+            continue
+        results.extend(eng.step())
+    return results, eng.clock() - t0
+
+
+def _run_once(model, params, prompts, gen, slots, cache_len, rate,
+              seed, warm):
+    from repro.serving import Engine
+    eng = Engine(model, params, num_slots=slots, cache_len=cache_len)
+    if warm:
+        eng.warmup(buckets=[p.shape[0] for p in prompts])
+    t0 = eng.clock()
+    results, _ = _drive_open_loop(eng, prompts, gen, rate, seed)
+    wall = eng.clock() - t0
+    assert len(results) == len(prompts)
+    return results, wall, eng.compile_counts()
+
+
+def bench(tiny=False, write=True):
+    import jax
+    from repro.models import Model
+    from repro.serving import serve_batch
+
+    if tiny:
+        from repro.configs.base import ModelConfig
+        cfg = ModelConfig(name="tiny-lm", num_layers=1, d_model=32,
+                          num_heads=2, num_kv_heads=2, d_ff=64,
+                          vocab_size=64, dtype="float32",
+                          param_dtype="float32")
+        streams, gen, slots, cache_len, max_len = (1, 2), 6, 2, 64, 12
+    else:
+        from repro.configs import get_smoke
+        cfg = get_smoke("phi4-mini-3.8b").replace(
+            dtype="float32", param_dtype="float32")
+        streams, gen, slots, cache_len, max_len = STREAMS, GEN, 4, 256, 64
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rows = {}
+    for n in streams:
+        prompts = _make_prompts(cfg, n, max_len, seed=n)
+        rate = max(2.0 * n, 4.0)       # arrivals overlap decode
+        # cold: compiles on the clock (deploy-restart worst case)
+        _, cold, _ = _run_once(model, params, prompts, gen, slots,
+                               cache_len, rate, n, warm=False)
+        # warm: after warmup; the steady-state numbers that matter
+        results, warm, counts = _run_once(model, params, prompts, gen,
+                                          slots, cache_len, rate, n,
+                                          warm=True)
+        toks = sum(r.num_tokens for r in results)
+        lats = [t for r in results
+                for t in r.timing["token_latencies"]]
+        rows[str(n)] = {
+            "tok_per_s": round(toks / max(warm, 1e-9), 2),
+            "p50_token_latency_ms": round(
+                _percentile(lats, 0.5) * 1e3, 3),
+            "p95_token_latency_ms": round(
+                _percentile(lats, 0.95) * 1e3, 3),
+            "cold_s": round(cold, 3),
+            "warm_s": round(warm, 3),
+            "tokens": toks,
+            "compile_counts": counts,
+        }
+
+    # serial fixed-batch reference at the middle stream count's budget
+    B = min(4, max(streams))
+    rng = np.random.default_rng(0)
+    batch = rng.integers(0, cfg.vocab_size, (B, max_len)).astype(np.int32)
+    serve_batch(model, params, batch, gen, verbose=False)   # compile
+    _, sstats = serve_batch(model, params, batch, gen, verbose=False)
+
+    rec = {
+        "arch": cfg.name,
+        "shape": {"slots": slots, "cache_len": cache_len, "gen": gen,
+                  "max_prompt": max_len, "dtype": cfg.dtype},
+        "streams": rows,
+        "serial_reference": {
+            "batch": B, "prompt_len": max_len,
+            "tok_per_s": round(sstats["tok_per_s"], 2),
+            "decode_s": round(sstats["decode_s"], 3)},
+    }
+    if write:
+        with open(OUT, "w") as fh:
+            json.dump(rec, fh, indent=1)
+            fh.write("\n")
+    return rec
+
+
+def run(em, quick=True):
+    """benchmarks.run entry: quick mode never overwrites the committed
+    BENCH record."""
+    rec = bench(tiny=quick, write=not quick)
+    for n, row in rec["streams"].items():
+        em.emit("serving", f"streams{n}", "tok_per_s", row["tok_per_s"])
+        em.emit("serving", f"streams{n}", "p50_ms",
+                row["p50_token_latency_ms"])
+        em.emit("serving", f"streams{n}", "p95_ms",
+                row["p95_token_latency_ms"])
+    em.emit("serving", "serial_reference", "tok_per_s",
+            rec["serial_reference"]["tok_per_s"])
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=1))

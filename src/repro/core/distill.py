@@ -133,6 +133,10 @@ def make_prefill_step(model: Model) -> Callable:
 
 
 def make_decode_step(model: Model) -> Callable:
+    """Greedy decode step.  ``pos`` may be a scalar (every row at the
+    same position — the fixed-batch ``serve_batch`` path) or a (B,)
+    vector of per-row positions (the continuous-batching engine, where
+    each cache slot is an independent stream)."""
     def decode(params, token, cache, pos):
         logits, cache = model.logits(params, {"tokens": token},
                                      mode="decode", cache=cache, pos=pos)
@@ -140,3 +144,26 @@ def make_decode_step(model: Model) -> Callable:
         return next_tok[:, None], cache
 
     return decode
+
+
+def make_bucket_prefill_step(model: Model) -> Callable:
+    """Prefill over a right-padded (b, Pb) prompt bucket.
+
+    Each row's true prompt length ``plens[i] <= Pb`` picks the hidden
+    state the first generated token is read from: with causal
+    attention, position plens[i]-1 never attends a pad, so the token is
+    bit-identical to an exact-length prefill of the same prompt.
+    Returns (first_token (b,) int32, linear prefill cache) — the cache
+    still holds all Pb (pad-polluted past plen) entries; the engine's
+    ``Model.insert_cache`` handles placement and ring conversion."""
+    from repro.models import transformer
+
+    def prefill(params, tokens, plens):
+        h, cache, _ = model.hidden(params, {"tokens": tokens},
+                                   mode="prefill", remat=False)
+        last = h[jnp.arange(h.shape[0]), plens - 1]          # (b, D)
+        logits = transformer.logits_fn(model.cfg, params, last[:, None])
+        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return tok, cache
+
+    return prefill

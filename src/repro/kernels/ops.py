@@ -59,7 +59,18 @@ def _pad_to(x, mult, axis):
 # ---------------------------------------------------------------------------
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
               impl="auto", block_q=None):
-    """Softmax attention.  q: (B,Sq,H,dh), k/v: (B,Skv,KV,dh)."""
+    """Softmax attention.  q: (B,Sq,H,dh), k/v: (B,Skv,KV,dh).
+
+    ``q_offset`` is the absolute position of q[:, 0]: a scalar, or a
+    (B,) int32 vector of per-row offsets (continuous-batching decode —
+    each batch row is an independent stream at its own position).
+    Vector offsets are a decode-path feature: they require Sq == 1 and
+    always take the xla path (the flash kernel's offset is scalar)."""
+    per_row_offset = getattr(q_offset, "ndim", 0) == 1
+    if per_row_offset and q.shape[1] != 1:
+        raise NotImplementedError(
+            "per-row q_offset is only supported for single-token decode "
+            f"(Sq == 1); got Sq={q.shape[1]}")
     if block_q is None:
         # cap the chunk count so unrolled counting stays compile-cheap
         block_q = max(CONFIG["block_q"], q.shape[1] // 16)
@@ -98,14 +109,16 @@ def _attention_xla(q, k, v, *, causal, window, softcap, q_offset, block_q):
         s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)       # (B,KV,g,bq,Skv)
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
-        qpos = base + jnp.arange(bqn)
+        # qpos: (bqn,) for a scalar base, (B, bqn) for per-row offsets
+        qpos = jnp.asarray(base)[..., None] + jnp.arange(bqn)
         kpos = jnp.arange(Skv)
-        m = jnp.ones((bqn, Skv), bool)
+        m = jnp.ones(qpos.shape + (Skv,), bool)
         if causal:
-            m &= kpos[None] <= qpos[:, None]
+            m &= kpos <= qpos[..., None]
         if window > 0:
-            m &= kpos[None] > qpos[:, None] - window
-        s = jnp.where(m[None, None, None], s, NEG_INF)
+            m &= kpos > qpos[..., None] - window
+        s = jnp.where(m[:, None, None] if m.ndim == 3
+                      else m[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         # probs in compute dtype for the PV matmul (flash-kernel practice;
         # halves the dominant attention HBM term — §Perf iter 6)

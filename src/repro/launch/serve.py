@@ -1,87 +1,182 @@
-"""Serving driver: batched prefill + greedy decode for a trained model.
+"""Serving CLI: thin front-end over the continuous-batching engine.
 
-CPU-scale by default (smoke configs); the same step functions are what
-the dry-run lowers against the production mesh.
+The engine itself lives in ``repro.serving`` (scheduler, slot cache,
+prefill/decode split); this module only parses flags, applies the
+deployment environment hygiene, builds the model, and drives traffic.
+
+Closed loop (submit everything, drain):
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
-      --smoke --prompt-len 32 --gen 16 --batch 4
+      --smoke --concurrent 8 --max-tokens 32
+
+Open loop (seeded Poisson arrivals at --arrival req/s, the pattern
+serve_bench measures):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b \
+      --smoke --concurrent 16 --arrival 4 --slots 4
+
+Deployment hygiene (SNIPPETS.md): allocator and logging knobs must be
+in the environment BEFORE jax/XLA initialise, so this module imports
+NOTHING heavy at module scope — ``main`` sets the env from flags and
+only then imports the stack.
+
+  --host-devices N   sets XLA_FLAGS=--xla_force_host_platform_device_count
+                     (multi-device CPU topology for mesh dry-runs)
+  TF_CPP_MIN_LOG_LEVEL defaults to 2 (mute absl chatter)
+  TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD defaults to 2**38 (mute large-
+                     alloc warnings for weight-sized host buffers)
+  LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 cannot be set
+                     from inside a running process — export it in the
+                     service unit; host weight staging is measurably
+                     faster under tcmalloc.
+
+Models the engine refuses (recurrent state, encoder-decoder) fall back
+to the fixed-batch serial path automatically.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCH_IDS, get_config, get_smoke
-from repro.core.distill import make_decode_step, make_prefill_step
-from repro.models import Model
-from repro import checkpoint as ckpt_lib
-
-
-def serve_batch(model: Model, params, prompts: np.ndarray, gen: int,
-                cache_len: int = 0, extra=None, verbose=True):
-    """prompts: (B, P) int32.  Returns (B, gen) generated tokens."""
-    B, P = prompts.shape
-
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model))
-
-    batch = {"tokens": jnp.asarray(prompts)}
-    if extra:
-        batch.update(extra)
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    # grow the self-attention caches: room for the gen decode steps (or
-    # a caller-requested total cache_len).  Model.grow_cache knows which
-    # leaves carry the tagged cache-length dim, so dims that merely
-    # equal the prefill length (batch, conv state, cross K/V) are safe.
-    cache = model.grow_cache(cache, max(gen, cache_len - P))
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    t_prefill = time.time() - t0
-
-    out = []
-    t0 = time.time()
-    for i in range(gen):
-        out.append(tok)
-        tok, cache = decode(params, tok, cache, jnp.int32(P + i))
-    t_decode = time.time() - t0
-    if verbose:
-        print(f"prefill {B}x{P}: {t_prefill:.2f}s; "
-              f"decode {gen} steps: {t_decode:.2f}s "
-              f"({B*gen/max(t_decode,1e-9):.1f} tok/s)")
-    return np.concatenate([np.asarray(t) for t in out], axis=1)
+def __getattr__(name):
+    # back-compat: launch.serve.serve_batch moved to repro.serving
+    if name in ("serve_batch", "effective_tokens"):
+        from repro import serving
+        return getattr(serving, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="phi4-mini-3.8b")
+def _apply_env(args):
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+    os.environ.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                          str(2 ** 38))
+    if args.host_devices:
+        flag = ("--xla_force_host_platform_device_count="
+                f"{args.host_devices}")
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+
+def _percentile(xs, q):
+    return sorted(xs)[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
+
+
+def _drive(eng, prompts, max_tokens, arrival, seed):
+    """Submit ``prompts`` and run to drain.  arrival <= 0: closed loop
+    (all at once).  arrival > 0: open loop — seeded exponential
+    inter-arrival gaps at ``arrival`` req/s, submitted as engine steps
+    pass their deadline."""
+    import numpy as np
+    if arrival <= 0:
+        for p in prompts:
+            eng.submit(p, max_tokens)
+        return eng.run()
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / arrival, len(prompts))
+    t0 = eng.clock()
+    deadlines = list(zip(t0 + np.cumsum(gaps), prompts))
+    results = []
+    while deadlines or not eng.scheduler.idle:
+        now = eng.clock()
+        while deadlines and deadlines[0][0] <= now:
+            _, p = deadlines.pop(0)
+            eng.submit(p, max_tokens)
+        if eng.scheduler.idle and deadlines:
+            time.sleep(min(max(deadlines[0][0] - now, 0.0), 0.01))
+            continue                      # idle-wait for next arrival
+        results.extend(eng.step())
+    return sorted(results, key=lambda r: r.rid)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--checkpoint", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length; lengths are drawn "
+                         "uniformly from [1, this] per request")
+    ap.add_argument("--max-tokens", "--gen", type=int, default=16,
+                    dest="max_tokens")
+    ap.add_argument("--concurrent", type=int, default=4,
+                    help="number of request streams to serve")
+    ap.add_argument("--arrival", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0 = closed loop: submit all up front)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine KV-cache slots (concurrent decodes)")
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="EOS token id for early stream termination")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serial", action="store_true",
+                    help="force the fixed-batch serve_batch path")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="XLA host-platform device count (see hygiene "
+                         "notes in the module docstring)")
+    args = ap.parse_args(argv)
+    _apply_env(args)                      # BEFORE the jax import below
 
+    import jax
+    import numpy as np
+
+    from repro import checkpoint as ckpt_lib
+    from repro.configs import ARCH_IDS, get_config, get_smoke
+    from repro.models import Model
+    from repro.serving import Engine, serve_batch
+
+    if args.arch not in ARCH_IDS:
+        ap.error(f"unknown arch {args.arch!r} (choose from {ARCH_IDS})")
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    params = model.init(jax.random.PRNGKey(0))
     if args.checkpoint:
         params = ckpt_lib.restore(args.checkpoint, params)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    extra = {}
-    if cfg.is_encoder_decoder:
-        extra["frames"] = jnp.asarray(rng.normal(
-            0, 1, (args.batch, cfg.encoder_seq_len, cfg.d_model)),
-            jnp.dtype(cfg.dtype))
-    gen = serve_batch(model, params, prompts, args.gen, extra=extra)
-    print("generated:", gen[:, :8], "...")
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(1, args.prompt_len + 1, args.concurrent)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+               for n in lens]
+
+    try:
+        if args.serial:
+            raise NotImplementedError("--serial")
+        eng = Engine(model, params, num_slots=args.slots,
+                     cache_len=args.cache_len, eos_id=args.eos)
+    except NotImplementedError as why:
+        # recurrent / encoder-decoder configs: fixed-batch fallback
+        print(f"serial fixed-batch path ({why})")
+        P = args.prompt_len
+        batch = np.stack([np.resize(p, P) for p in prompts])
+        extra = {}
+        if cfg.is_encoder_decoder:
+            import jax.numpy as jnp
+            extra["frames"] = jnp.asarray(rng.normal(
+                0, 1, (len(prompts), cfg.encoder_seq_len, cfg.d_model)),
+                jnp.dtype(cfg.dtype))
+        tokens, stats = serve_batch(model, params, batch,
+                                    args.max_tokens, extra=extra,
+                                    eos_id=args.eos)
+        print("generated:", tokens[:, :8], "...")
+        return stats
+
+    eng.warmup(buckets=[p.shape[0] for p in prompts])
+    t0 = eng.clock()
+    results = _drive(eng, prompts, args.max_tokens, args.arrival,
+                     args.seed)
+    wall = eng.clock() - t0
+    toks = sum(r.num_tokens for r in results)
+    lats = [t for r in results for t in r.timing["token_latencies"]]
+    print(f"{len(results)} streams, {toks} tokens in {wall:.2f}s "
+          f"({toks / max(wall, 1e-9):.1f} tok/s aggregate)")
+    print(f"per-token latency p50 {_percentile(lats, .5)*1e3:.1f}ms "
+          f"p95 {_percentile(lats, .95)*1e3:.1f}ms; "
+          f"compile counts {eng.compile_counts()}")
+    for r in results[:4]:
+        print(f"  req {r.rid} plen {r.prompt_len}: {r.tokens[:8]} ...")
+    return results
 
 
 if __name__ == "__main__":

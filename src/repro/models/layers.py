@@ -49,7 +49,9 @@ def apply_norm(cfg: ModelConfig, p, x):
 # RoPE (supports stablelm-style partial rotary)
 # ---------------------------------------------------------------------------
 def apply_rope(x, positions, theta: float, pct: float = 1.0):
-    """x: (B, S, N, dh); positions: (S,) or scalar broadcastable."""
+    """x: (B, S, N, dh); positions: (S,) shared across the batch, or
+    (B, S) per-row absolute positions (continuous-batching decode, where
+    every cache slot sits at its own position)."""
     B, S, N, dh = x.shape
     rot = int(dh * pct)
     rot -= rot % 2
@@ -58,9 +60,14 @@ def apply_rope(x, positions, theta: float, pct: float = 1.0):
     xr, xp = x[..., :rot], x[..., rot:]
     half = rot // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = positions.reshape(-1, 1).astype(jnp.float32) * freqs  # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    if positions.ndim == 2:                      # (B, S) per-row
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        cos = jnp.cos(ang)[:, :, None, :]        # (B, S, 1, half)
+        sin = jnp.sin(ang)[:, :, None, :]
+    else:
+        ang = positions.reshape(-1, 1).astype(jnp.float32) * freqs
+        cos = jnp.cos(ang)[None, :, None, :]     # (1, S, 1, half)
+        sin = jnp.sin(ang)[None, :, None, :]
     x1, x2 = xr[..., :half], xr[..., half:]
     x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
     out = jnp.concatenate(
@@ -135,7 +142,9 @@ def attn_apply(cfg: ModelConfig, p, x, *, kind=ATTN, mode="train",
 
     mode: "train" (no cache) | "prefill" (returns populated cache) |
     "decode" (x is (B,1,D); cache holds cache_len entries; pos is the
-    absolute position of the new token).
+    absolute position of the new token — a scalar shared by the batch,
+    or a (B,) int32 vector of PER-ROW positions for continuous-batching
+    decode, where every cache slot advances independently).
     """
     from repro.sharding.specs import shard_heads
     B, S, D = x.shape
@@ -155,17 +164,26 @@ def attn_apply(cfg: ModelConfig, p, x, *, kind=ATTN, mode="train",
                           softcap=cfg.attn_softcap, impl=impl)
         new_cache = {"k": k, "v": v} if mode == "prefill" else None
     else:  # decode
+        pos = jnp.asarray(pos)
+        per_row = pos.ndim == 1                  # (B,) slot positions
         if use_rope:
-            positions = jnp.full((1,), pos)
+            positions = pos[:, None] if per_row else jnp.full((1,), pos)
             q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
             k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
         Lc = cache["k"].shape[1]
         ring = window > 0 and Lc <= window
         slot = jnp.mod(pos, Lc) if ring else pos
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if per_row:
+            def write(c, u, s):
+                return jax.lax.dynamic_update_slice(
+                    c, u.astype(c.dtype), (s, 0, 0))
+            ck = jax.vmap(write)(cache["k"], k, slot)
+            cv = jax.vmap(write)(cache["v"], v, slot)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
         # Ring mode (window-bounded cache): every live slot is inside the
         # window by construction — slots fill in order 0..Lc-1 before
         # wrapping — so the causal mask with q_offset=pos stays exact for

@@ -80,6 +80,17 @@ class Model:
             return encdec.grow_cache(self.cfg, cache, extra_tokens)
         return transformer.grow_cache(self.cfg, cache, extra_tokens)
 
+    # ---- serving: scatter a bucket-prefill into persistent slots ----
+    def insert_cache(self, slot_cache, prefill_cache, slots, plens):
+        """Writes each request of a padded-bucket prefill cache into its
+        assigned row of the continuous-batching slot cache (see
+        ``transformer.insert_cache``); decoder-only models only."""
+        if self.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "slot-cache serving is decoder-only")
+        return transformer.insert_cache(self.cfg, slot_cache,
+                                        prefill_cache, slots, plens)
+
     def _text_hidden(self, h, batch):
         """Drop frontend positions so hidden aligns with tokens/labels."""
         if "embeds" in batch and batch["embeds"] is not None:

@@ -167,6 +167,84 @@ def grow_cache(cfg: ModelConfig, cache, extra_tokens: int):
     return out
 
 
+def insert_cache(cfg: ModelConfig, slot_cache, prefill_cache, slots,
+                 plens):
+    """Scatters a padded-bucket prefill's per-request KV into rows of a
+    persistent slot cache — the admission step of the continuous-
+    batching engine (``repro.serving``).
+
+    ``prefill_cache`` is the LINEAR cache a ``mode="prefill"`` forward
+    over a (b, Pb) padded token bucket returns (every attention layer
+    holds Pb entries, pad positions included).  ``slots`` (b,) int32
+    names the destination row per request; an out-of-range slot (the
+    bucket's batch-padding rows use ``num_slots``) is dropped by the
+    scatter.  ``plens`` (b,) int32 is each request's TRUE prompt length
+    (pads excluded) — it only matters for sliding-window layers, where
+    the over-long linear cache must become a ring the way
+    ``grow_cache`` does, but per request: keep the last ``w`` REAL keys
+    (positions [max(plen-w, 0), ...)), rolled so position p sits at
+    slot p % w — garbage from pad/garbage positions beyond plen is
+    never attended because decode writes positions plen, plen+1, ... in
+    order before the causal q_offset mask ever exposes them.
+
+    Global-attention rows are zero-padded to the slot length: the zero
+    fill (rather than leaving a stale previous occupant) keeps evicted
+    slots inert and makes reused-slot contents deterministic.
+    Recurrent blocks (RGLRU/RWKV) have no length axis a padded prefill
+    can be corrected along — the serving engine refuses those configs
+    up front, so this walk only ever meets attention blocks.
+    """
+    def place_leaf(window):
+        def core(dst, src):
+            # dst (S, L, KV, dh) one slot-cache leaf; src (b, Pb, ...)
+            b, Pb = src.shape[0], src.shape[1]
+            L = dst.shape[1]
+            if Pb <= L:      # linear prefix fits: zero-fill the tail
+                pads = [(0, 0)] * src.ndim
+                pads[1] = (0, L - Pb)
+                rows = jnp.pad(src, pads)
+            else:            # ring-convert with each request's true len
+                assert window > 0, "global cache shorter than a prompt"
+
+                def ring_row(row, plen):
+                    start = jnp.clip(plen - L, 0, Pb - L)
+                    win = jax.lax.dynamic_slice(
+                        row, (start,) + (0,) * (row.ndim - 1),
+                        (L,) + row.shape[1:])
+                    return jnp.roll(win, start, axis=0)
+
+                rows = jax.vmap(ring_row)(src, plens)
+            return dst.at[slots].set(rows.astype(dst.dtype), mode="drop")
+
+        return core
+
+    def place_block(kind, dst, src):
+        if kind not in (ATTN, ATTN_LOCAL):
+            raise ValueError(
+                f"insert_cache: {kind} blocks have no insertable KV")
+        fn = place_leaf(cfg.window if kind == ATTN_LOCAL else 0)
+        # periods leaves carry a leading stacked axis; vmap over it
+        extra = jax.tree.leaves(dst)[0].ndim - 4
+        for _ in range(extra):
+            fn = jax.vmap(fn)
+        return jax.tree.map(fn, dst, src)
+
+    fkd, nper, tail = _layer_plan(cfg)
+    out = {"head_blocks": [
+        place_block(cfg.pattern[0], d, s)
+        for d, s in zip(slot_cache["head_blocks"],
+                        prefill_cache["head_blocks"])]}
+    if nper:
+        out["periods"] = {
+            f"b{j}": place_block(kind, slot_cache["periods"][f"b{j}"],
+                                 prefill_cache["periods"][f"b{j}"])
+            for j, kind in enumerate(cfg.pattern)}
+    out["tail"] = [place_block(kind, d, s)
+                   for kind, d, s in zip(tail, slot_cache["tail"],
+                                         prefill_cache["tail"])]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Blocks
 # ---------------------------------------------------------------------------

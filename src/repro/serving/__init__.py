@@ -1,0 +1,15 @@
+"""Serving tier: continuous batching for the distilled student.
+
+- ``Engine`` (engine.py): padded-bucket prefill/decode split over one
+  persistent slot cache; ``RequestState``/``StreamResult`` request API.
+- ``Scheduler`` (scheduler.py): pure-python buckets / slots / admission.
+- ``serve_batch`` (batch.py): fixed-batch serial reference + fallback.
+"""
+from repro.serving.batch import effective_tokens, serve_batch
+from repro.serving.engine import Engine, StreamResult
+from repro.serving.scheduler import (Admission, RequestState, Scheduler,
+                                     SlotAllocator, round_pow2)
+
+__all__ = ["Engine", "StreamResult", "Scheduler", "SlotAllocator",
+           "Admission", "RequestState", "serve_batch",
+           "effective_tokens", "round_pow2"]

@@ -1,0 +1,94 @@
+"""Fixed-batch serial serving: the engine's parity reference.
+
+``serve_batch`` prefills a (B, P) prompt batch and greedy-decodes
+``gen`` steps with every row at the same position — the original
+launch/serve.py demo loop, kept as the bit-identity oracle the
+continuous-batching engine is tested against, and as the fallback for
+model families the engine refuses (recurrent state, encoder-decoder).
+
+Two fixes over the old demo (ISSUE satellite): generated-token
+accounting masks everything after a row's first EOS, and timing comes
+back in a stats dict (the bench and the tests consume the same numbers
+instead of parsing stdout).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distill import make_decode_step, make_prefill_step
+
+
+def effective_tokens(tokens: np.ndarray,
+                     eos_id: Optional[int]) -> np.ndarray:
+    """Per-row count of generated tokens up to and INCLUDING the first
+    EOS (everything after it is decode-loop exhaust, not output)."""
+    B, G = tokens.shape
+    if eos_id is None:
+        return np.full((B,), G, np.int64)
+    hit = tokens == eos_id
+    first = np.where(hit.any(1), hit.argmax(1), G - 1)
+    return first + 1
+
+
+def serve_batch(model, params, prompts: np.ndarray, gen: int,
+                cache_len: int = 0, extra=None, eos_id: Optional[int] = None,
+                verbose: bool = True):
+    """prompts: (B, P) int32.  Returns ((B, gen) generated tokens,
+    stats dict).
+
+    stats: prefill_s / decode_s wall times, generated (EOS-masked token
+    count across the batch), tok_per_s (generated / decode_s), and the
+    per-row effective lengths.  The decode loop itself always runs
+    ``gen`` fixed steps — that is what makes this the serial reference
+    the continuous-batching engine is bit-compared against; EOS only
+    masks the THROUGHPUT accounting (the old print counted dead
+    post-EOS tokens as work).
+    """
+    B, P = prompts.shape
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    batch = {"tokens": jnp.asarray(prompts)}
+    if extra:
+        batch.update(extra)
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    # grow the self-attention caches: room for the gen decode steps (or
+    # a caller-requested total cache_len).  Model.grow_cache knows which
+    # leaves carry the tagged cache-length dim, so dims that merely
+    # equal the prefill length (batch, conv state, cross K/V) are safe.
+    cache = model.grow_cache(cache, max(gen, cache_len - P))
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out = []
+    t0 = time.time()
+    for i in range(gen):
+        out.append(tok)
+        tok, cache = decode(params, tok, cache, jnp.int32(P + i))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
+    eff = effective_tokens(tokens, eos_id)
+    generated = int(eff.sum())
+    stats = {
+        "batch": B, "prompt_len": P, "gen": gen,
+        "prefill_s": t_prefill, "decode_s": t_decode,
+        "generated": generated,
+        "tok_per_s": generated / max(t_decode, 1e-9),
+        "effective_lens": eff.tolist(),
+    }
+    if verbose:
+        print(f"prefill {B}x{P}: {t_prefill:.2f}s; "
+              f"decode {gen} steps: {t_decode:.2f}s "
+              f"({stats['tok_per_s']:.1f} tok/s over {generated} "
+              "EOS-masked tokens)")
+    return tokens, stats

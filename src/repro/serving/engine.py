@@ -1,0 +1,251 @@
+"""Continuous-batching inference engine over the ring KV-cache.
+
+The one-shot FedKT artifact is a distilled student each silo then
+serves to real traffic; this engine is that serving hot path.  It keeps
+ONE persistent ``num_slots``-row KV cache (built by ``Model.init_cache``
+— global layers linear at ``cache_len``, sliding-window layers as
+``window``-slot rings, exactly the PR-3 ``grow_cache`` layout) and runs
+two jitted steps against it:
+
+  prefill  — new requests, right-padded into a pow2 ``(batch,
+             prompt_len)`` bucket, prefill in one dispatch; each
+             request's KV rows are scattered into its assigned slot
+             (``Model.insert_cache``: zero-padded global rows,
+             per-true-length ring conversion for window layers) and its
+             first token is read at position ``plen - 1``.
+  decode   — every step advances ALL slots at once with a (num_slots,)
+             per-slot position vector; finished or empty slots decode
+             garbage into their own row, which the next admission's
+             insert overwrites.  EOS / token-budget eviction frees the
+             slot for the next waiting request.
+
+Because both steps only ever see shapes from the closed bucket set —
+``(pow2 batch, pow2 prompt_len)`` prefills and the single
+``(num_slots, 1)`` decode — jit never recompiles after warmup
+(test-enforced via trace-cache counts in tests/test_serving.py).
+
+Scheduling (FIFO bucket admission, slot allocation, overflow clamps)
+lives in ``scheduler.py``; per-request bit-identity to the serial
+``serve_batch`` reference is pinned by the parity suite.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ATTN, ATTN_LOCAL
+from repro.serving.scheduler import RequestState, Scheduler
+
+
+@dataclass(frozen=True)
+class StreamResult:
+    """Terminal view of one request: its generated stream + accounting.
+
+    timing keys (seconds): ``ttft`` submit -> first token, ``queue``
+    submit -> admission, ``total`` submit -> done; ``token_latencies``
+    are per-token gaps (first token measured from admission), the
+    per-token latency distribution the bench's p50/p95 summarizes.
+    """
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    finish_reason: str
+    timing: Dict[str, Any]
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.tokens)
+
+
+def _result(req: RequestState) -> StreamResult:
+    times = [req.t_admit] + req.token_times
+    lat = [b - a for a, b in zip(times, times[1:])]
+    return StreamResult(
+        rid=req.rid, prompt_len=req.plen, tokens=list(req.tokens),
+        finish_reason=req.finish_reason,
+        timing={"ttft": req.t_first - req.t_submit,
+                "queue": req.t_admit - req.t_submit,
+                "total": req.t_done - req.t_submit,
+                "token_latencies": lat})
+
+
+class Engine:
+    """Continuous-batching greedy-decode engine for one decoder model.
+
+    Supported configs: decoder-only, attention blocks only (global
+    and/or sliding-window).  Recurrent blocks (RGLRU/RWKV) carry their
+    whole past in one state a padded prefill would pollute, and
+    encoder-decoder/frontend models need per-request side inputs —
+    both are refused up front (``serve_batch`` still serves them in
+    fixed batches).  MoE configs run, but capacity dropping couples
+    rows of a batch, so per-request bit-identity to the serial
+    reference only holds when no token is dropped.
+    """
+
+    def __init__(self, model, params, *, num_slots: int = 8,
+                 cache_len: int = 256, max_batch: Optional[int] = None,
+                 eos_id: Optional[int] = None, min_bucket: int = 8,
+                 clock=time.perf_counter):
+        cfg = model.cfg
+        if cfg.is_encoder_decoder or cfg.frontend_embeds:
+            raise NotImplementedError(
+                "Engine serves decoder-only token models; use "
+                "serve_batch for encoder-decoder/frontend configs")
+        bad = [k for k in cfg.pattern if k not in (ATTN, ATTN_LOCAL)]
+        if bad:
+            raise NotImplementedError(
+                f"recurrent blocks {bad} cannot join padded-bucket "
+                "prefill (state has no length axis to correct); use "
+                "serve_batch")
+        if any(k == ATTN_LOCAL for k in cfg.pattern) \
+                and cache_len < cfg.window:
+            raise ValueError(
+                f"cache_len {cache_len} < window {cfg.window}: the ring "
+                "would slide earlier than serve_batch's")
+
+        self.model = model
+        self.params = params
+        self.eos_id = eos_id
+        self.clock = clock
+        self.scheduler = Scheduler(num_slots=num_slots,
+                                   cache_len=cache_len,
+                                   max_batch=max_batch,
+                                   min_bucket=min_bucket)
+
+        from repro.core.distill import (make_bucket_prefill_step,
+                                        make_decode_step)
+        self._prefill = jax.jit(make_bucket_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model))
+        self._insert = jax.jit(model.insert_cache)
+        self._cache = model.init_cache(num_slots, cache_len)
+        # host mirrors of the per-slot decode inputs
+        self._slot_tok = np.zeros((num_slots,), np.int32)
+        self._slot_pos = np.zeros((num_slots,), np.int32)
+        self._steps = 0
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def num_slots(self) -> int:
+        return self.scheduler.num_slots
+
+    @property
+    def cache_len(self) -> int:
+        return self.scheduler.cache_len
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Trace-cache sizes of the three jitted steps — the
+        zero-recompiles-after-warmup test reads these."""
+        return {"prefill": self._prefill._cache_size(),
+                "decode": self._decode._cache_size(),
+                "insert": self._insert._cache_size()}
+
+    def warmup(self, buckets: Sequence[int] = ()) -> Dict[str, int]:
+        """Compiles the decode step and one prefill per (pow2-rounded)
+        prompt-length bucket x pow2 batch size up to max_batch, so live
+        traffic never hits a compile.  Returns compile_counts()."""
+        sched = self.scheduler
+        lens = sorted({sched.bucket_of(b) for b in buckets})
+        batches = []
+        b = 1
+        while b <= sched.max_batch:
+            batches.append(b)
+            b *= 2
+        for blen in lens:
+            for bb in batches:
+                toks = np.zeros((bb, blen), np.int32)
+                plens = np.ones((bb,), np.int32)
+                slots = np.full((bb,), self.num_slots, np.int32)  # drop
+                tok, pc = self._prefill(self.params, toks, plens)
+                self._cache = self._insert(self._cache, pc, slots, plens)
+                jax.block_until_ready(tok)
+        if lens:  # decode compiles once; any warm cache state will do
+            out, cache = self._decode(
+                self.params, self._slot_tok[:, None], self._cache,
+                self._slot_pos)
+            self._cache = cache
+            jax.block_until_ready(out)
+        return self.compile_counts()
+
+    # -- request API -----------------------------------------------------
+    def submit(self, prompt, max_tokens: int = 64) -> RequestState:
+        return self.scheduler.submit(prompt, max_tokens,
+                                     now=self.clock())
+
+    def step(self) -> List[StreamResult]:
+        """One scheduler iteration: admit (at most one bucket) + one
+        decode sweep over the slots.  Returns requests finished now."""
+        done: List[RequestState] = []
+        self._admit(done)
+        self._decode_sweep(done)
+        self._steps += 1
+        return [_result(r) for r in done]
+
+    def run(self, max_steps: Optional[int] = None) -> List[StreamResult]:
+        """Steps until every submitted request finished; results in
+        submit (rid) order."""
+        out: List[StreamResult] = []
+        while not self.scheduler.idle:
+            out.extend(self.step())
+            if max_steps is not None and self._steps >= max_steps:
+                raise RuntimeError(f"not idle after {max_steps} steps")
+        return sorted(out, key=lambda r: r.rid)
+
+    def serve(self, prompts, max_tokens: int = 64) -> List[StreamResult]:
+        """Convenience closed loop: submit all, run to completion."""
+        for p in prompts:
+            self.submit(p, max_tokens)
+        return self.run()
+
+    # -- internals -------------------------------------------------------
+    def _admit(self, done: List[RequestState]):
+        adm = self.scheduler.next_admission()
+        if adm is None:
+            return
+        b, blen = adm.batch, adm.bucket_len
+        toks = np.zeros((b, blen), np.int32)
+        plens = np.ones((b,), np.int32)
+        # padding rows target the out-of-range slot id -> scatter drops
+        slots = np.full((b,), self.num_slots, np.int32)
+        for i, r in enumerate(adm.reqs):
+            toks[i, :r.plen] = r.prompt
+            plens[i] = r.plen
+            slots[i] = r.slot
+        first, pcache = self._prefill(self.params, toks, plens)
+        self._cache = self._insert(self._cache, pcache, slots, plens)
+        first = np.asarray(first)
+        now = self.clock()
+        for i, r in enumerate(adm.reqs):
+            r.t_admit = now
+            self._emit(r, int(first[i]), now, done)
+
+    def _decode_sweep(self, done: List[RequestState]):
+        live = self.scheduler.running
+        if not live:
+            return
+        for r in live:
+            self._slot_tok[r.slot] = r.tokens[-1]
+            self._slot_pos[r.slot] = r.next_pos
+        nxt, self._cache = self._decode(
+            self.params, self._slot_tok[:, None], self._cache,
+            self._slot_pos)
+        nxt = np.asarray(nxt)[:, 0]
+        now = self.clock()
+        for r in list(live):
+            self._emit(r, int(nxt[r.slot]), now, done)
+
+    def _emit(self, req: RequestState, token: int, now: float,
+              done: List[RequestState]):
+        req.tokens.append(token)
+        req.token_times.append(now)
+        if req.t_first is None:
+            req.t_first = now
+        finished = (self.eos_id is not None and token == self.eos_id)
+        reason = "eos" if finished else "length"
+        if finished or len(req.tokens) >= req.max_tokens:
+            self.scheduler.evict(req, reason)
+            req.t_done = now
+            done.append(req)

@@ -1,0 +1,492 @@
+"""Serving-tier lockdown: scheduler parity + engine invariants.
+
+The headline suite of the serving PR.  Three layers:
+
+  1. Pure-scheduler properties (no jax): pow2 bucket rounding, FIFO
+     bucket-match admission, slot lifecycle — random request streams
+     driven through a model-free replay of the engine loop, checked
+     against the cache-safety invariants (positions strictly below
+     cache_len, no slot aliasing, eviction frees exactly the evicted
+     slot).  Hypothesis variants run where available; seeded plain
+     variants always run, so the logic is exercised in every tier.
+  2. Engine parity: continuous-batched output is bit-identical PER
+     REQUEST to the serial ``serve_batch`` reference — staggered
+     arrivals, mixed prompt lengths sharing one bucket, arrival-order
+     permutations, EOS early exit — on the tiny 1-layer LM and on the
+     real smoke archs (global attention and the sliding-window ring).
+  3. Compile discipline: after ``Engine.warmup`` the jit trace-cache
+     sizes never move again, no matter how traffic staggers.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from conftest import smoke_model, tiny_lm_config  # noqa: F401
+
+SEED_STREAMS = [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# 1. scheduler: units + properties (no jax, runs in milliseconds)
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    from repro.serving import Scheduler
+    base = dict(num_slots=4, cache_len=64, min_bucket=8)
+    base.update(kw)
+    return Scheduler(**base)
+
+
+def test_round_pow2_basics():
+    from repro.serving import round_pow2
+    assert [round_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == \
+        [1, 2, 4, 8, 8, 16]
+    assert round_pow2(3, lo=8) == 8
+    with pytest.raises(ValueError):
+        round_pow2(0)
+
+
+def test_bucket_of_caps_at_cache_len():
+    s = _sched(cache_len=48)           # non-pow2 cache: cap must bind
+    assert s.bucket_of(5) == 8
+    assert s.bucket_of(33) == 48       # pow2 would be 64 > cache rows
+    assert _sched(cache_len=64).bucket_of(33) == 64
+
+
+def test_submit_validates_and_clamps():
+    s = _sched(cache_len=64)
+    with pytest.raises(ValueError):
+        s.submit(np.arange(64), 4)     # plen == cache_len: no decode room
+    with pytest.raises(ValueError):
+        s.submit(np.zeros((0,)), 4)
+    r = s.submit(np.arange(60), max_tokens=100)
+    assert r.max_tokens == 4           # clamped to cache_len - plen
+
+
+def test_fifo_bucket_match_admission():
+    s = _sched(num_slots=3)
+    a = s.submit(np.arange(5), 4)      # bucket 8
+    b = s.submit(np.arange(20), 4)     # bucket 32 — different, waits
+    c = s.submit(np.arange(7), 4)      # bucket 8 — joins a
+    adm = s.next_admission()
+    assert [r.rid for r in adm.reqs] == [a.rid, c.rid]
+    assert adm.bucket_len == 8 and adm.batch == 2
+    assert b.status == "waiting"
+    # head b now fixes bucket 32; only 1 slot left
+    adm2 = s.next_admission()
+    assert [r.rid for r in adm2.reqs] == [b.rid] and adm2.batch == 1
+    assert s.next_admission() is None  # no free slots
+
+
+def test_slot_allocator_lifecycle():
+    from repro.serving import SlotAllocator
+    al = SlotAllocator(2)
+    assert al.acquire() == 0 and al.acquire() == 1
+    with pytest.raises(RuntimeError):
+        al.acquire()
+    al.release(0)
+    with pytest.raises(ValueError):
+        al.release(0)                  # double free
+    with pytest.raises(ValueError):
+        al.release(5)                  # out of range
+    assert al.acquire() == 0           # lowest-free-first
+
+
+def test_evict_requires_running():
+    s = _sched()
+    r = s.submit(np.arange(4), 2)
+    with pytest.raises(ValueError):
+        s.evict(r, "eos")
+
+
+# -- model-free replay of the engine loop, instrumented -------------------
+def drive_scheduler(sched, stream, rng):
+    """Replays the engine's admit+sweep loop without a model: ``stream``
+    is [(plen, max_tokens)] submitted a random 0-2 per step.  Asserts
+    the cache-safety invariants every step; returns finished requests.
+    """
+    pending = list(stream)
+    done, occupied = [], {}
+
+    def emit(r):                          # mirrors Engine._emit
+        r.tokens.append(0)
+        if len(r.tokens) >= r.max_tokens:
+            slot, before = r.slot, set(occupied)
+            sched.evict(r, "length")
+            del occupied[slot]
+            # eviction freed exactly the evicted slot
+            assert set(sched.slots.free) & before == {slot}
+            done.append(r)
+
+    while pending or not sched.idle:
+        for _ in range(int(rng.integers(0, 3))):
+            if pending:
+                plen, mt = pending.pop(0)
+                sched.submit(np.zeros(plen, np.int32), mt)
+        adm = sched.next_admission()
+        if adm is not None:
+            assert adm.batch >= len(adm.reqs) > 0
+            assert adm.batch & (adm.batch - 1) == 0       # pow2
+            for r in adm.reqs:
+                assert adm.bucket_len >= r.plen           # fits bucket
+                assert adm.bucket_len <= sched.cache_len  # fits rows
+                assert r.slot not in occupied             # no aliasing
+                occupied[r.slot] = r
+                emit(r)                                   # prefill token
+        for r in list(sched.running):                     # decode sweep
+            assert r.next_pos < sched.cache_len           # never overflow
+            emit(r)
+    assert not occupied and len(sched.slots.free) == sched.num_slots
+    return done
+
+
+def _rand_stream(rng, n, cache_len):
+    return [(int(rng.integers(1, cache_len)),
+             int(rng.integers(1, 2 * cache_len)))
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("seed", SEED_STREAMS)
+def test_scheduler_stream_invariants(seed):
+    rng = np.random.default_rng(seed)
+    cache_len = int(rng.choice([32, 48, 64]))
+    sched = _sched(num_slots=int(rng.integers(1, 6)),
+                   cache_len=cache_len)
+    done = drive_scheduler(sched, _rand_stream(rng, 25, cache_len), rng)
+    assert len(done) == 25
+    for r in done:
+        # budget respected AND clamped: no position ever hit cache_len
+        assert len(r.tokens) == r.max_tokens
+        assert r.plen + len(r.tokens) <= cache_len
+
+
+@given(seed=st.integers(0, 10_000), slots=st.integers(1, 6),
+       cache=st.sampled_from([32, 48, 64]), n=st.integers(1, 30))
+@settings(max_examples=25, deadline=None)
+def test_scheduler_stream_invariants_prop(seed, slots, cache, n):
+    rng = np.random.default_rng(seed)
+    sched = _sched(num_slots=slots, cache_len=cache)
+    assert len(drive_scheduler(sched, _rand_stream(rng, n, cache),
+                               rng)) == n
+
+
+@given(plen=st.integers(1, 63))
+@settings(max_examples=50, deadline=None)
+def test_bucket_rounding_prop(plen):
+    s = _sched(cache_len=64)
+    b = s.bucket_of(plen)
+    assert b >= plen and b >= s.min_bucket and b <= s.cache_len
+    assert b & (b - 1) == 0
+    if b > s.min_bucket:               # minimality: half would not fit
+        assert b // 2 < plen
+
+
+# ---------------------------------------------------------------------------
+# 2. serve_batch: EOS-masked stats (the satellite fix)
+# ---------------------------------------------------------------------------
+def test_effective_tokens():
+    from repro.serving import effective_tokens
+    toks = np.array([[3, 9, 9, 9],     # EOS at step 0 -> 1 token
+                     [5, 6, 3, 8],     # EOS mid-stream -> 3
+                     [5, 6, 7, 8]])    # no EOS -> all 4
+    assert effective_tokens(toks, 3).tolist() == [1, 3, 4]
+    assert effective_tokens(toks, None).tolist() == [4, 4, 4]
+
+
+def test_serve_batch_stats(tiny_lm):
+    from repro.serving import serve_batch
+    cfg, model = tiny_lm
+    import jax
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    toks, stats = serve_batch(model, params, prompts, 6, verbose=False)
+    assert toks.shape == (3, 6)
+    # pick an emitted token as EOS: masked accounting must drop the tail
+    eos = int(toks[0, 2])
+    _, s2 = serve_batch(model, params, prompts, 6, eos_id=eos,
+                        verbose=False)
+    assert s2["generated"] == sum(s2["effective_lens"]) < 18
+    assert s2["tok_per_s"] == pytest.approx(
+        s2["generated"] / s2["decode_s"], rel=1e-6)
+
+
+def test_launch_serve_reexport():
+    """Back-compat: launch.serve still exposes serve_batch (now the
+    serving package's)."""
+    from repro.launch import serve as launch_serve
+    from repro.serving import serve_batch
+    assert launch_serve.serve_batch is serve_batch
+
+
+# ---------------------------------------------------------------------------
+# 3. engine parity vs the serial reference
+# ---------------------------------------------------------------------------
+def _serial_refs(model, params, prompts, gen):
+    from repro.serving import serve_batch
+    refs = []
+    for p in prompts:
+        toks, _ = serve_batch(model, params, p[None], gen, verbose=False)
+        refs.append(toks[0].tolist())
+    return refs
+
+
+def _mixed_prompts(cfg, plens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32)
+            for p in plens]
+
+
+@pytest.fixture(scope="module")
+def tiny_serving(tiny_lm):
+    import jax
+    cfg, model = tiny_lm
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg, [3, 5, 8, 12, 16, 13])
+    refs = _serial_refs(model, params, prompts, 10)
+    return cfg, model, params, prompts, refs
+
+
+def _engine(model, params, **kw):
+    from repro.serving import Engine
+    base = dict(num_slots=4, cache_len=64)
+    base.update(kw)
+    return Engine(model, params, **base)
+
+
+def test_parity_staggered_arrivals(tiny_serving):
+    """Mixed prompt lengths, arrivals staggered across steps, more
+    requests than slots: every stream bit-identical to its solo serial
+    run."""
+    cfg, model, params, prompts, refs = tiny_serving
+    eng = _engine(model, params)
+    eng.submit(prompts[0], 10)
+    eng.submit(prompts[1], 10)
+    eng.step()
+    eng.submit(prompts[2], 10)
+    eng.submit(prompts[3], 10)
+    eng.step()
+    eng.step()
+    eng.submit(prompts[4], 10)
+    eng.submit(prompts[5], 10)
+    res = eng.run()
+    assert len(res) == len(prompts)
+    for r in res:
+        assert r.tokens == refs[r.rid], f"rid {r.rid} diverged"
+        assert r.finish_reason == "length"
+        assert r.num_tokens == 10
+        assert len(r.timing["token_latencies"]) == 10
+        assert r.timing["total"] >= r.timing["ttft"] >= \
+            r.timing["queue"] >= 0
+
+
+def test_parity_arrival_order_invariance(tiny_serving):
+    """The same request set in permuted submit orders yields the same
+    per-prompt streams (scheduling changes WHEN, never WHAT)."""
+    cfg, model, params, prompts, refs = tiny_serving
+    for perm in ([2, 0, 4, 1, 5, 3], [5, 4, 3, 2, 1, 0]):
+        eng = _engine(model, params, num_slots=2)
+        rid_to_prompt = {}
+        for i in perm:
+            r = eng.submit(prompts[i], 10)
+            rid_to_prompt[r.rid] = i
+        for r in eng.run():
+            assert r.tokens == refs[rid_to_prompt[r.rid]], \
+                f"order {perm}: prompt {rid_to_prompt[r.rid]} diverged"
+
+
+def test_parity_one_bucket_mixed_lengths(tiny_serving):
+    """Lengths 3/5/8 round to ONE 8-bucket and prefill in one dispatch;
+    right-padding must be invisible (causal masking + true-plen
+    readout)."""
+    cfg, model, params, prompts, refs = tiny_serving
+    eng = _engine(model, params)
+    for i in (0, 1, 2):
+        eng.submit(prompts[i], 10)
+    adm_counts = eng.compile_counts()
+    res = eng.run()
+    # all three went through a single prefill shape: one trace
+    assert eng.compile_counts()["prefill"] - adm_counts["prefill"] <= 1
+    for r in res:
+        assert r.tokens == refs[r.rid]
+
+
+def test_parity_eos_early_exit(tiny_serving):
+    """EOS eviction: the engine's stream is the PREFIX of the serial
+    stream up to and including the first EOS, reason recorded, and the
+    freed slot is reused by a later request."""
+    cfg, model, params, prompts, refs = tiny_serving
+    eos = refs[2][3]                   # token the ref emits at step 3
+    eng = _engine(model, params, num_slots=2, eos_id=eos)
+    for p in prompts[:4]:
+        eng.submit(p, 10)
+    res = eng.run()
+    assert len(res) == 4
+    for r in res:
+        ref = refs[r.rid]
+        cut = ref.index(eos) + 1 if eos in ref else len(ref)
+        assert r.tokens == ref[:cut]
+        want = "eos" if eos in ref else "length"
+        assert r.finish_reason == want
+    assert any(r.finish_reason == "eos" for r in res)
+
+
+def test_engine_serve_closed_loop(tiny_serving):
+    cfg, model, params, prompts, refs = tiny_serving
+    eng = _engine(model, params, num_slots=8)
+    res = eng.serve(prompts, max_tokens=10)
+    assert [r.tokens for r in res] == refs
+
+
+# -- compile discipline ---------------------------------------------------
+def test_zero_recompiles_after_warmup(tiny_serving):
+    """Warm the bucket set, then throw staggered mixed traffic at the
+    engine: trace-cache sizes must not move."""
+    cfg, model, params, prompts, refs = tiny_serving
+    eng = _engine(model, params)
+    warm = eng.warmup(buckets=[p.shape[0] for p in prompts])
+    assert warm["decode"] == 1
+    rid_to_prompt = {}
+    for i in (0, 3):
+        rid_to_prompt[eng.submit(prompts[i], 10).rid] = i
+    eng.step()
+    for i in (2, 4, 5):
+        rid_to_prompt[eng.submit(prompts[i], 10).rid] = i
+    res = eng.run()
+    assert eng.compile_counts() == warm, "recompile after warmup"
+    for r in res:
+        assert r.tokens == refs[rid_to_prompt[r.rid]]
+
+
+# -- real smoke archs: global attention and the sliding-window ring -------
+def test_parity_smoke_global_attention():
+    import jax
+    cfg, model = smoke_model("phi4-mini-3.8b", dtype="float32",
+                             param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg, [5, 8, 12], seed=1)
+    refs = _serial_refs(model, params, prompts, 8)
+    eng = _engine(model, params, num_slots=2)
+    eng.submit(prompts[0], 8)
+    eng.submit(prompts[1], 8)
+    eng.step()
+    eng.submit(prompts[2], 8)
+    for r in eng.run():
+        assert r.tokens == refs[r.rid]
+
+
+def test_parity_smoke_ring_window_crossing():
+    """gemma2 smoke (window 64): prompts shorter AND longer than the
+    window, so insert_cache's per-request ring conversion and the
+    sliding mask both get exercised mid-stream."""
+    import jax
+    cfg, model = smoke_model("gemma2-27b", dtype="float32",
+                             param_dtype="float32")
+    assert cfg.window == 64
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg, [30, 70, 100], seed=2)
+    refs = _serial_refs(model, params, prompts, 8)
+    eng = _engine(model, params, num_slots=2, cache_len=256)
+    eng.submit(prompts[0], 8)
+    eng.submit(prompts[1], 8)
+    eng.step()
+    eng.submit(prompts[2], 8)
+    for r in eng.run():
+        assert r.tokens == refs[r.rid], \
+            f"ring parity broke at plen {r.prompt_len}"
+
+
+# -- config gating --------------------------------------------------------
+def test_engine_refuses_recurrent_and_encdec():
+    from repro.serving import Engine
+    import jax
+    cfg, model = smoke_model("recurrentgemma-2b")
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        Engine(model, params)
+    cfg2, model2 = smoke_model("whisper-tiny")
+    params2 = model2.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        Engine(model2, params2)
+
+
+def test_engine_refuses_short_cache_for_window():
+    from repro.serving import Engine
+    import jax
+    cfg, model = smoke_model("gemma2-27b", dtype="float32",
+                             param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="window"):
+        Engine(model, params, cache_len=32)   # < window 64
+
+
+# ---------------------------------------------------------------------------
+# 4. demo + bench smokes (tier-1 guards, tree_fit_bench pattern)
+# ---------------------------------------------------------------------------
+def _load_example(name):
+    path = os.path.join(os.path.dirname(__file__), "..", "examples", name)
+    spec = importlib.util.spec_from_file_location(name[:-3], path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_serve_demo_smoke(tmp_path):
+    """examples/serve_demo.py end to end on the tiny flow: federated
+    round -> checkpoint -> engine, parity asserted inside the demo."""
+    demo = _load_example("serve_demo.py")
+    out = demo.main(tiny=True, ckpt_dir=str(tmp_path), verbose=False)
+    assert out["parity"] is True
+    assert out["results"] and all(r.num_tokens > 0
+                                  for r in out["results"])
+
+
+def test_serve_bench_smoke(tmp_path):
+    """benchmarks/serve_bench.py tiny mode: same code path as the
+    committed BENCH_serving.json, toy shapes, no write."""
+    from benchmarks.serve_bench import bench
+    rec = bench(tiny=True, write=False)
+    for n in rec["streams"]:
+        row = rec["streams"][n]
+        assert row["tok_per_s"] > 0
+        assert row["p95_token_latency_ms"] >= \
+            row["p50_token_latency_ms"] > 0
+    assert rec["serial_reference"]["tok_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 5. slow soak: 16 concurrent streams through 4 slots
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_soak_16_streams(tiny_lm):
+    import jax
+    cfg, model = tiny_lm
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(7)
+    plens = rng.integers(2, 40, 16).tolist()
+    prompts = [rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32)
+               for p in plens]
+    refs = _serial_refs(model, params, prompts, 12)
+    eng = _engine(model, params, num_slots=4, cache_len=64)
+    eng.warmup(buckets=plens)
+    warm = eng.compile_counts()
+    # open-loop arrivals: drip the 16 streams in while decoding
+    it = iter(enumerate(prompts))
+    rid_to_prompt, res = {}, []
+    pending = True
+    while pending or not eng.scheduler.idle:
+        for _ in range(2):
+            try:
+                i, p = next(it)
+            except StopIteration:
+                pending = False
+                break
+            rid_to_prompt[eng.submit(p, 12).rid] = i
+        res.extend(eng.step())
+    assert len(res) == 16
+    assert eng.compile_counts() == warm
+    for r in res:
+        assert r.tokens == refs[rid_to_prompt[r.rid]]
